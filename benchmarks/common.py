@@ -1,0 +1,46 @@
+"""Benchmark utilities: wall-clock timing of jitted callables on CPU.
+
+CPU wall-time preserves the paper's RELATIVE comparisons (dense-MXU-path vs
+gather-DSP-path) even though absolute numbers differ from the NPU: both
+backends execute gathers/selects on scalar units and matmuls on wide units.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+ROWS: List[Dict] = []
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, repeats: int = 5) -> float:
+    """Median seconds per call (blocks on device results)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        _block(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _block(out):
+    for leaf in _leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def _leaves(x):
+    import jax
+    return jax.tree_util.tree_leaves(x)
+
+
+def record(name: str, seconds: float, derived: str = "") -> Dict:
+    row = {"name": name, "us_per_call": seconds * 1e6, "derived": derived}
+    ROWS.append(row)
+    print(f"{name},{row['us_per_call']:.1f},{derived}")
+    return row

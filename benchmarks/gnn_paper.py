@@ -1,0 +1,316 @@
+"""Paper-table reproductions (one function per table/figure).
+
+Fig. 20 — progressive technique speedups per model (GCN / GAT / SAGE-max).
+Fig. 21 — Series-1 vs Series-2 NPU: analytic MXU-tile-count scaling.
+Fig. 22 — CPU vs GPU vs NPU: gather-path vs dense-path on one backend.
+Fig. 23 / energy — bytes-moved proxy (no power rails on CPU).
+Accuracy table — FP32 vs QuantGr vs GrAx accuracies per model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gnn import GNN_MODELS
+from repro.core.graph import add_self_loops, pad_graph
+from repro.core.layers import Techniques
+from repro.core.models import (GNNConfig, build_operands, calibrate_quant,
+                               evaluate, forward_baseline, forward_grannite,
+                               init_params, train_node_classifier)
+from repro.core.sparsity import sparsity_report
+from repro.data.graphs import cora_like, citeseer_like
+
+from .common import record, time_fn
+from .tpu_model import analyze as tpu_analyze
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(kind: str, dataset: str = "cora", **cfg_kw):
+    g = cora_like() if dataset == "cora" else citeseer_like()
+    pg = pad_graph(g)
+    cfg = GNN_MODELS[kind](dataset)
+    if cfg_kw:
+        cfg = dataclasses.replace(cfg, **cfg_kw)
+    params = init_params(KEY, cfg)
+    return g, pg, cfg, params
+
+
+# ------------------------------------------------------------------ Fig 20
+
+
+def fig20_progressive(dataset: str = "cora") -> List[Dict]:
+    """Cumulative technique stacks per model; speedup over the baseline
+    (out-of-the-box gather/scatter mapping).
+
+    Two columns per stack:
+      * cpu  — measured CPU wall-clock (honest, but CPUs are GOOD at gathers
+               — the paper's own Fig. 8 premise — so the ordering inverts);
+      * tpu  — modelled accelerator latency from the compiled HLO
+               (benchmarks.tpu_model): MXU-rate dense FLOPs, full-HBM bytes,
+               gather/scatter bytes at the serialized DSP-analogue rate.
+               This column carries the paper's comparison.
+    """
+    rows = []
+
+    def _bench(label, fn, *args, base=None):
+        ti = time_fn(fn, *args)
+        mi = tpu_analyze(fn, *args)["t_model_s"]
+        if base is None:
+            rows.append(record(label, ti, f"tpu_model={mi*1e6:.0f}us 1.00x"))
+        else:
+            t0, m0 = base
+            rows.append(record(
+                label, ti,
+                f"cpu {t0/ti:.2f}x | tpu_model {m0/mi:.2f}x"))
+        return ti, mi
+
+    # --- GCN: baseline -> +StaGr/GraphSplit -> +GrAd/NodePad -> +GraSp ->
+    #          +QuantGr  (paper: 1.51x -> 1.4x -> 1.1x -> 2.7x)
+    g, pg, cfg, params = _setup("gcn", dataset)
+    x = jnp.asarray(pg.features)
+    ei = jnp.asarray(add_self_loops(g.edge_index, g.num_nodes))
+    ops_ = build_operands(pg, cfg, grasp=True)
+    ops_q = dataclasses.replace(ops_, quant=calibrate_quant(params, cfg, x, ops_))
+
+    base = jax.jit(lambda p, xx: forward_baseline(p, cfg, xx, ei, pg.capacity))
+    b = _bench(f"fig20/gcn/{dataset}/baseline", base, params, x)
+
+    stacks = [
+        ("stagr+graphsplit", ops_, Techniques(stagr=True, graphsplit=True)),
+        ("grad+nodepad", ops_, Techniques(stagr=True, graphsplit=True,
+                                          grad_dynamic=True)),
+        ("grasp", ops_, Techniques(stagr=True, graphsplit=True,
+                                   grad_dynamic=True, grasp=True)),
+        ("quantgr", ops_q, Techniques(stagr=True, graphsplit=True,
+                                      grad_dynamic=True, quantgr=True)),
+    ]
+    for name, op, t in stacks:
+        if t.grad_dynamic:
+            # GrAd: Â is an argument (runtime input)
+            fn = jax.jit(lambda p, xx, na: forward_grannite(
+                p, cfg, xx, dataclasses.replace(op, norm_adj=na), t))
+            _bench(f"fig20/gcn/{dataset}/{name}", fn, params, x, op.norm_adj,
+                   base=b)
+        else:
+            fn = jax.jit(lambda p, xx: forward_grannite(p, cfg, xx, op, t))
+            _bench(f"fig20/gcn/{dataset}/{name}", fn, params, x, base=b)
+
+    # --- GAT: baseline -> EffOp -> +GrAx1 -> +GrAx2  (paper: 3x -> 7.6x)
+    g, pg, cfg, params = _setup("gat", dataset)
+    x = jnp.asarray(pg.features)
+    ei = jnp.asarray(add_self_loops(g.edge_index, g.num_nodes))
+    ops_ = build_operands(pg, cfg)
+    base = jax.jit(lambda p, xx: forward_baseline(p, cfg, xx, ei, pg.capacity))
+    b = _bench(f"fig20/gat/{dataset}/baseline", base, params, x)
+    for name, t in [
+            ("effop", Techniques(effop=True)),
+            ("effop+grax1", Techniques(effop=True, grax1=True)),
+            ("effop+grax1+grax2", Techniques(effop=True, grax1=True,
+                                             grax2=True))]:
+        fn = jax.jit(lambda p, xx: forward_grannite(p, cfg, xx, ops_, t))
+        _bench(f"fig20/gat/{dataset}/{name}", fn, params, x, base=b)
+
+    # --- SAGE-max: baseline -> EffOp -> GrAx3 (paper: 2x -> 3.2x; NOT cumulative)
+    g, pg, cfg, params = _setup("sage-max", dataset)
+    x = jnp.asarray(pg.features)
+    ei = jnp.asarray(g.edge_index)
+    ops_ = build_operands(pg, cfg)
+    base = jax.jit(lambda p, xx: forward_baseline(p, cfg, xx, ei, pg.capacity))
+    b = _bench(f"fig20/sage-max/{dataset}/baseline", base, params, x)
+    for name, t in [("effop", Techniques(effop=True)),
+                    ("grax3", Techniques(effop=True, grax3=True))]:
+        fn = jax.jit(lambda p, xx: forward_grannite(p, cfg, xx, ops_, t))
+        _bench(f"fig20/sage-max/{dataset}/{name}", fn, params, x, base=b)
+    return rows
+
+
+# ------------------------------------------------------------------ Fig 22
+
+
+def fig22_path_comparison(dataset: str = "cora") -> List[Dict]:
+    """Gather/scatter path (the CPU/DSP-analogue) vs GraNNite dense path
+    (the NPU/MXU-analogue) for all three layer types. The `cpu` column is
+    the measured host wall-clock of each path (the paper's CPU bar); the
+    `tpu_model` column prices the same compiled HLOs with accelerator
+    constants (the paper's NPU bar)."""
+    rows = []
+    for kind in ("gcn", "gat", "sage-mean"):
+        g, pg, cfg, params = _setup(kind, dataset)
+        x = jnp.asarray(pg.features)
+        ei = jnp.asarray(add_self_loops(g.edge_index, g.num_nodes)
+                         if kind != "sage-mean" else g.edge_index)
+        ops_ = build_operands(pg, cfg)
+        t = {"gcn": Techniques(stagr=True),
+             "gat": Techniques.full_gat(),
+             "sage-mean": Techniques.full_sage()}[kind]
+        slow = jax.jit(lambda p, xx: forward_baseline(p, cfg, xx, ei,
+                                                      pg.capacity))
+        fast = jax.jit(lambda p, xx: forward_grannite(p, cfg, xx, ops_, t))
+        ts = time_fn(slow, params, x)              # CPU executes the model
+        mf = tpu_analyze(fast, params, x)["t_model_s"]   # NPU-analogue
+        ms = tpu_analyze(slow, params, x)["t_model_s"]
+        rows.append(record(f"fig22/{kind}/{dataset}/cpu_gather_path", ts,
+                           "1.00x (measured host)"))
+        rows.append(record(
+            f"fig22/{kind}/{dataset}/tpu_dense_path", mf,
+            f"{ts/mf:.2f}x vs cpu | {ms/mf:.2f}x vs gather-on-accel"))
+    return rows
+
+
+# ------------------------------------------------------------------ Fig 21
+
+
+def fig21_tile_scaling(dataset: str = "cora") -> List[Dict]:
+    """Series-1 (2 NPU tiles) vs Series-2 (4 tiles): analytic roofline-model
+    throughput scaling for GCN under the full GraNNite stack. CacheG keeps
+    Â and the weights SRAM-resident (the paper's own technique), so DRAM
+    traffic is activations only; compute scales with tile count. The paper
+    observes 1.7x (not the ideal 2x) because the small graph leaves the
+    wider part partially idle — reproduced here as the memory-bound floor
+    that does NOT scale with tiles."""
+    rows = []
+    g = cora_like() if dataset == "cora" else citeseer_like()
+    pg = pad_graph(g)
+    n, f, h = pg.capacity, g.features.shape[1], 64
+    flops = 2.0 * n * f * h + 2.0 * n * n * h          # combine + aggregate
+    # QuantGr int8 datapath; CacheG: only activations cross DRAM
+    bytes_dram = n * f + n * h * 2                     # x in, h/out streams
+    for name, tiles in (("series1", 2), ("series2", 4)):
+        peak = 8e12 * tiles            # int8 MAC/s per tile (FlexNN-class)
+        bw = 68e9                      # LPDDR5x-class shared bandwidth
+        t_comp = flops / peak
+        t_mem = bytes_dram / bw
+        t = max(t_comp, t_mem)
+        rows.append(record(f"fig21/gcn/{dataset}/{name}", t,
+                           f"tiles={tiles} comp={t_comp*1e6:.0f}us "
+                           f"mem={t_mem*1e6:.0f}us"))
+    r = rows[0]["us_per_call"] / rows[1]["us_per_call"]
+    record(f"fig21/gcn/{dataset}/scaling", 0.0,
+           f"{r:.2f}x (paper: 1.7x; ideal 2x broken by the mem floor)")
+    return rows
+
+
+# ------------------------------------------------------------- accuracy
+
+
+def accuracy_table(dataset: str = "cora", epochs: int = 100) -> List[Dict]:
+    """Top-1 accuracy per model: FP32 dense path, QuantGr INT8 (GCN), and
+    GrAx approximations (GAT / SAGE-max). Paper baselines: GCN 80.8, GAT
+    81.3, SAGE-max 79.3, SAGE-mean 75.5 (real Cora; ours is shape-matched
+    synthetic, so ABSOLUTE numbers differ — the DELTAS are the claim)."""
+    rows = []
+    for kind in ("gcn", "gat", "sage-max", "sage-mean"):
+        g, pg, cfg, _ = _setup(kind, dataset)
+        ops_ = build_operands(pg, cfg)
+        t_plain = {"gcn": Techniques(stagr=True),
+                   "gat": Techniques(effop=True),
+                   "sage-max": Techniques(effop=True),
+                   "sage-mean": Techniques(stagr=True)}[kind]
+
+        def fwd(p, x, _t=t_plain, _c=cfg, _o=ops_):
+            return forward_grannite(p, _c, x, _o, _t)
+
+        if kind.startswith("sage"):
+            # train on the edge-list path (the paper trains in PyG and
+            # deploys; the dense F=1433 masked-max is an inference form —
+            # training it on one CPU core is prohibitive), evaluate the
+            # DEPLOYED dense path: the deltas are the paper's claim
+            ei = jnp.asarray(g.edge_index)
+
+            def fwd_train(p, x, _c=cfg, _e=ei, _n=pg.capacity):
+                return forward_baseline(p, _c, x, _e, _n)
+        else:
+            fwd_train = fwd
+
+        params = train_node_classifier(KEY, cfg, pg, fwd_train, epochs=epochs)
+        acc = evaluate(cfg, params, pg, fwd)
+        rows.append(record(f"accuracy/{kind}/{dataset}/fp32", 0.0,
+                           f"{acc:.4f}"))
+
+        if kind == "gcn":
+            x = jnp.asarray(pg.features)
+            ops_q = dataclasses.replace(
+                ops_, quant=calibrate_quant(params, cfg, x, ops_))
+            t_q = Techniques(stagr=True, quantgr=True)
+
+            def fwd_q(p, xx):
+                return forward_grannite(p, cfg, xx, ops_q, t_q)
+
+            acc_q = evaluate(cfg, params, pg, fwd_q)
+            rows.append(record(f"accuracy/{kind}/{dataset}/quantgr_int8", 0.0,
+                               f"{acc_q:.4f} (delta {acc_q-acc:+.4f})"))
+        if kind in ("gat", "sage-max"):
+            t_x = (Techniques(effop=True, grax1=True, grax2=True)
+                   if kind == "gat" else Techniques(effop=True, grax3=True))
+
+            def fwd_x(p, xx):
+                return forward_grannite(p, cfg, xx, ops_, t_x)
+
+            acc_x = evaluate(cfg, params, pg, fwd_x)
+            rows.append(record(f"accuracy/{kind}/{dataset}/grax", 0.0,
+                               f"{acc_x:.4f} (delta {acc_x-acc:+.4f})"))
+    return rows
+
+
+def fig22_density_crossover() -> List[Dict]:
+    """Where the dense-masked rewrite wins even at BYTES granularity.
+
+    At Cora's sparsity (≈0.14% density) the dense GAT multiplies FLOPs
+    ~500× over the edge-list form, so a bandwidth-only accelerator model
+    shows an inversion — the paper's GAT win comes from the DSP being
+    *latency*-bound on serialized gathers, which a bytes-rate model is too
+    conservative to capture. This sweep raises edge density and shows the
+    crossover where the dense path wins under our conservative model too —
+    the technique's win condition (E·F comparable to N²)."""
+    import numpy as np
+    from repro.data.graphs import planetoid_like
+    rows = []
+    n = 1024
+    for avg_deg in (4, 32, 128):
+        g = planetoid_like(num_nodes=n, num_edges=n * avg_deg // 2,
+                           num_feats=64, num_classes=5, seed=3)
+        pg = pad_graph(g)
+        cfg = GNNConfig(kind="gat", in_feats=64, hidden=32, num_classes=5,
+                        heads=4)
+        params = init_params(KEY, cfg)
+        x = jnp.asarray(pg.features)
+        ei = jnp.asarray(add_self_loops(g.edge_index, g.num_nodes))
+        ops_ = build_operands(pg, cfg)
+        slow = jax.jit(lambda p, xx: forward_baseline(p, cfg, xx, ei,
+                                                      pg.capacity))
+        fast = jax.jit(lambda p, xx: forward_grannite(
+            p, cfg, xx, ops_, Techniques.full_gat()))
+        ms = tpu_analyze(slow, params, x)["t_model_s"]
+        mf = tpu_analyze(fast, params, x)["t_model_s"]
+        rows.append(record(
+            f"fig22x/gat/deg{avg_deg}/dense_vs_gather", mf,
+            f"{ms/mf:.2f}x (gather path {ms*1e6:.0f}us)"))
+    return rows
+
+
+# ------------------------------------------------------- energy / GraSp
+
+
+def energy_proxy(dataset: str = "cora") -> List[Dict]:
+    """Fig. 23 proxy: bytes moved per inference (dominant energy driver on
+    edge parts). Dense vs ZVC/GraSp-compressed operand traffic."""
+    g = cora_like() if dataset == "cora" else citeseer_like()
+    pg = pad_graph(g)
+    rep = sparsity_report(pg.norm_adj)
+    rows = [
+        record(f"energy/{dataset}/adj_dense_bytes", 0.0,
+               str(rep["dense_bytes"])),
+        record(f"energy/{dataset}/adj_zvc_bytes", 0.0, str(rep["zvc_bytes"])),
+        record(f"energy/{dataset}/adj_block_bytes", 0.0,
+               str(rep["block_compacted_bytes"])),
+        record(f"energy/{dataset}/flop_skip_fraction", 0.0,
+               f"{rep['flop_skip_fraction']:.3f}"),
+        record(f"energy/{dataset}/zvc_saving", 0.0,
+               f"{rep['dense_bytes']/max(rep['zvc_bytes'],1):.1f}x"),
+    ]
+    return rows

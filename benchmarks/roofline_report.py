@@ -1,0 +1,118 @@
+"""Merge results/dryrun_*.jsonl into the §Dry-run / §Roofline markdown
+tables for EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--dir results]
+
+Later rows override earlier ones per (arch, shape, mesh) — re-run fix files
+supersede the first attempt. The roofline table is single-pod only (the
+multi-pod rows prove compile/fit; their cost columns are deployment-raw).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARCH_ORDER = ["gemma2-27b", "chatglm3-6b", "qwen3-4b", "smollm-135m",
+              "mamba2-2.7b", "olmoe-1b-7b", "llama4-scout-17b-a16e",
+              "jamba-v0.1-52b", "phi-3-vision-4.2b", "whisper-base"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(directory: str) -> Dict[tuple, dict]:
+    rows: Dict[tuple, dict] = {}
+    files = sorted(glob.glob(os.path.join(directory, "dryrun_*.jsonl")),
+                   key=os.path.getmtime)
+    for f in files:
+        for line in open(f):
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def fmt_t(t) -> str:
+    if t is None:
+        return "-"
+    if t >= 1.0:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t*1e3:.1f}ms"
+    return f"{t*1e6:.0f}us"
+
+
+def fmt_b(b) -> str:
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(rows: Dict[tuple, dict]) -> str:
+    out = ["| arch | shape | mesh | status | compile | args GiB/dev | "
+           "temp GiB/dev | collectives |",
+           "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for m in ("single", "multi"):
+                r = rows.get((a, s, m))
+                if r is None:
+                    out.append(f"| {a} | {s} | {m} | MISSING | | | | |")
+                    continue
+                if r["status"] == "skipped":
+                    out.append(f"| {a} | {s} | {m} | skipped¹ | | | | |")
+                    continue
+                if r["status"] != "ok":
+                    out.append(f"| {a} | {s} | {m} | **FAILED** | | | | "
+                               f"{r.get('error','')[:60]} |")
+                    continue
+                ma = r.get("memory_analysis", {})
+                coll = r.get("coll_breakdown", {}) or {}
+                ck = "+".join(sorted(k.replace("all-", "a")
+                                     .replace("reduce-scatter", "rs")
+                                     .replace("collective-permute", "cp")
+                                     for k in coll)) or "none"
+                out.append(
+                    f"| {a} | {s} | {m} | ok | {r.get('compile_s','')}s | "
+                    f"{fmt_b(ma.get('argument_bytes'))} | "
+                    f"{fmt_b(ma.get('temp_bytes'))} | {ck} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: Dict[tuple, dict]) -> str:
+    out = ["| arch | shape | t_compute | t_memory | t_collective | bound | "
+           "MODEL_FLOPS | useful | roofline |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s, "single"))
+            if r is None or r.get("status") != "ok":
+                continue
+            out.append(
+                f"| {a} | {s} | {fmt_t(r['t_compute_s'])} | "
+                f"{fmt_t(r['t_memory_s'])} | {fmt_t(r['t_collective_s'])} | "
+                f"{r['bottleneck']} | {r['model_flops']:.2e} | "
+                f"{r['useful_fraction']*100:.1f}% | "
+                f"{r['roofline_fraction']*100:.1f}% |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    n_ok = sum(r.get("status") == "ok" for r in rows.values())
+    n_skip = sum(r.get("status") == "skipped" for r in rows.values())
+    n_fail = len(rows) - n_ok - n_skip
+    print(f"## Dry-run matrix ({n_ok} ok / {n_skip} skipped / "
+          f"{n_fail} failed of {len(rows)} cells)\n")
+    print(dryrun_table(rows))
+    print("\n¹ long_500k is decode at 524288 with quadratic attention — "
+          "skipped for pure full-attention archs per the assignment.\n")
+    print("## Roofline (single-pod 16x16, per-chip terms)\n")
+    print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

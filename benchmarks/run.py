@@ -1,0 +1,50 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--dataset cora]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record) and
+writes benchmarks/results.json. The roofline report (§Roofline) is generated
+separately by launch/dryrun.py (needs the 512-device placeholder env).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow accuracy-table training runs")
+    ap.add_argument("--dataset", default="cora",
+                    choices=["cora", "citeseer", "both"])
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "results.json"))
+    args = ap.parse_args()
+
+    from . import gnn_paper, lm_subs
+    from .common import ROWS
+
+    datasets = (["cora", "citeseer"] if args.dataset == "both"
+                else [args.dataset])
+    print("name,us_per_call,derived")
+    for ds in datasets:
+        gnn_paper.fig20_progressive(ds)
+        gnn_paper.fig22_path_comparison(ds)
+        gnn_paper.fig21_tile_scaling(ds)
+        gnn_paper.energy_proxy(ds)
+        if not args.quick:
+            gnn_paper.accuracy_table(ds)
+    gnn_paper.fig22_density_crossover()
+    lm_subs.ssd_vs_sequential()
+    lm_subs.moe_dispatch_paths()
+    lm_subs.serving_bucket_reuse()
+
+    with open(args.out, "w") as f:
+        json.dump(ROWS, f, indent=1)
+    print(f"# wrote {len(ROWS)} rows -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""phi-3-vision-4.2b [vlm]: 32L d_model=3072 32H (MHA, kv=32) d_ff=8192
+vocab=32064 — phi3-mini text backbone + CLIP vision frontend
+[hf:microsoft/Phi-3-vision-128k-instruct].
+
+The CLIP frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings (B, num_patches, d_model) which the LM prepends
+to the token embeddings (NodePad thinking: a fixed patch budget keeps the
+compiled blob static across image resolutions).
+"""
+from repro.nn.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    frontend="vision_stub",
+    num_patches=1024,
+    act="silu",
+    gated_mlp=True,
+    tie_embeddings=False,
+)

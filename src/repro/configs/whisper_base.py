@@ -1,0 +1,27 @@
+"""whisper-base [audio]: 6L d_model=512 8H (MHA kv=8) d_ff=2048 vocab=51865
+— encoder-decoder; conv-mel frontend is a STUB (precomputed frame
+embeddings) [arXiv:2212.04356].
+
+Backbone-only per the assignment: 6 encoder + 6 decoder layers, layernorm,
+GELU, non-gated MLP. Positions use RoPE (our substrate's scheme) instead of
+whisper's learned absolute embeddings — a backbone-equivalent substitution
+recorded in DESIGN.md §Arch-applicability.
+"""
+from repro.nn.config import ArchConfig, EncoderConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,                   # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    encoder=EncoderConfig(num_layers=6, frames=1500),
+    frontend="audio_stub",
+    norm="layernorm",
+    act="gelu",
+    gated_mlp=False,
+    tie_embeddings=True,
+)

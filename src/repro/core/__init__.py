@@ -1,0 +1,12 @@
+"""GraNNite core: the paper's contribution as composable JAX modules."""
+from . import effop, graph, layers, masks, models, partition, quant, sparsity
+from .graph import Graph, PaddedGraph, node_bucket, pad_graph, update_edges
+from .layers import Techniques
+from .models import GNNConfig, GranniteOperands, build_operands
+
+__all__ = [
+    "effop", "graph", "layers", "masks", "models", "partition", "quant",
+    "sparsity", "Graph", "PaddedGraph", "node_bucket", "pad_graph",
+    "update_edges", "Techniques", "GNNConfig", "GranniteOperands",
+    "build_operands",
+]

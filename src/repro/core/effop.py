@@ -1,0 +1,107 @@
+"""EffOp: rewrite control-heavy ops as data-parallel masked arithmetic.
+
+Catalogue of the paper's DSP->DPU substitutions, expressed as
+gather/select-HLO -> dense-MXU-HLO rewrites (the TPU analogue — gather,
+scatter, and select lower to slow non-MXU work on TPU exactly as they land on
+the NPU's DSP):
+
+  gather(h, idx)            -> one_hot(idx) @ h
+  segment_sum(msg, dst)     -> A_mask @ msg
+  where(mask, x, -inf)      -> x + additive_bias          (GrAx1)
+  a_src[i] + a_dst[j] edge  -> outer broadcast-add         (GrAx2 ordering)
+  segment_max(msg, dst)     -> max over (mask*msg + bias)  (GrAx3)
+
+These are semantically exact when masks are exact; the GrAx variants trade
+bit-exactness for fewer ops (documented per function).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def one_hot_gather(h: jnp.ndarray, idx: jnp.ndarray, *, dtype=jnp.float32) -> jnp.ndarray:
+    """EffOp gather: rows h[idx] computed as one_hot(idx) @ h.
+
+    Turns a (slow, sequential) row gather into an MXU matmul. Worth it when
+    idx is reused across many feature columns (GNN aggregation) — the one-hot
+    operand is exactly StaGr's "precomputed mask".
+    """
+    oh = jax.nn.one_hot(idx, h.shape[0], dtype=dtype)
+    return oh @ h
+
+
+def masked_select_add(scores: jnp.ndarray, additive_bias: jnp.ndarray) -> jnp.ndarray:
+    """GrAx1: replace where(mask, scores, -inf) with scores + bias."""
+    return scores + additive_bias
+
+
+def masked_select_exact(scores: jnp.ndarray, mask01: jnp.ndarray) -> jnp.ndarray:
+    """Exact (baseline) masking: multiplicative mask then Select. This is the
+    control-heavy form the paper's Fig. 16 removes."""
+    return jnp.where(mask01 > 0, scores * mask01, NEG_INF)
+
+
+def broadcast_add_scores(src_term: jnp.ndarray, dst_term: jnp.ndarray,
+                         *, grax2: bool = True) -> jnp.ndarray:
+    """GAT edge logits e[i,j] = dst_term[i] + src_term[j].
+
+    exact path (grax2=False): materialize dst broadcast, transpose the src
+    broadcast, then add — the transpose+broadcast pair Fig. 17 eliminates.
+    GrAx2 path: single fused rank-promotion add (add then broadcast). The
+    results are numerically identical; the win is purely op-count/layout —
+    on TPU the exact path forces an extra copy, visible in the HLO.
+    """
+    if grax2:
+        return dst_term[:, None] + src_term[None, :]
+    d = jnp.broadcast_to(dst_term[:, None], (dst_term.shape[0], src_term.shape[0]))
+    s = jnp.transpose(jnp.broadcast_to(src_term[:, None],
+                                       (src_term.shape[0], dst_term.shape[0])))
+    return d + s
+
+
+def masked_max_aggregate(h: jnp.ndarray, mask01: jnp.ndarray,
+                         *, grax3: bool = True,
+                         row_block: int = 128) -> jnp.ndarray:
+    """SAGE-max aggregation over a 0/1 sampled adjacency.
+
+    GrAx3 (paper Fig. 18): mask * h broadcast-multiply then max-pool on the
+    DPU. Correct whenever the aggregated features are >= 0 (paper's stated
+    condition; after ReLU this always holds). Rows with no neighbors get 0.
+
+    The (N, N, F) product is streamed in `row_block`-row tiles (the NPU
+    streams it through the DPU exactly the same way; materializing it whole
+    is 45 TB for Cora layer 1) — this is also the Pallas kernel's tiling.
+
+    exact path: additive -inf bias (select-based), correct for any sign.
+    """
+    n = mask01.shape[0]
+    rb = min(row_block, n)
+
+    def block(mrows):
+        if grax3:
+            prod = mrows[:, :, None] * h[None, :, :]
+            return jnp.max(prod, axis=1)
+        bias = jnp.where(mrows > 0, 0.0, NEG_INF)
+        masked = h[None, :, :] + bias[:, :, None]
+        out = jnp.max(masked, axis=1)
+        has_nbr = mrows.sum(axis=1, keepdims=True) > 0
+        return jnp.where(has_nbr, out, 0.0)
+
+    if n % rb:
+        return block(mask01)
+    blocks = mask01.reshape(n // rb, rb, n)
+    # checkpoint: the (rb, N, F) product is recomputed in backward instead
+    # of 22 blocks' residuals living at once (44 GB for Cora layer 1)
+    return jax.lax.map(jax.checkpoint(block), blocks).reshape(n, h.shape[1])
+
+
+def segment_softmax_dense(logits: jnp.ndarray, additive_bias: jnp.ndarray) -> jnp.ndarray:
+    """Dense row-softmax with additive masking — EffOp's replacement for
+    per-destination segment softmax over edge lists."""
+    z = logits + additive_bias
+    z = z - jax.lax.stop_gradient(jnp.max(z, axis=-1, keepdims=True))
+    e = jnp.exp(z)
+    return e / jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-12)

@@ -1,0 +1,205 @@
+"""Graph containers and structure preprocessing (StaGr / PreG / SymG / NodePad).
+
+The paper's Step-1 enablement: graphs are preprocessed on the *host*
+(GraphSplit assigns control-heavy structure work to the CPU) into dense,
+statically-shaped operands that the device consumes as plain matmuls.
+
+NodePad: every graph is padded to a fixed *bucket* capacity (a multiple of
+the MXU tile, 128) so the compiled program is reused across graph sizes —
+the JAX analogue of the paper's "one precompiled blob" (jit cache hit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+MXU_TILE = 128  # TPU systolic tile; NodePad buckets align to this.
+
+
+@dataclasses.dataclass
+class Graph:
+    """A static graph snapshot. Host-side (numpy) until padded/uploaded."""
+
+    edge_index: np.ndarray  # (2, E) int32, row 0 = src, row 1 = dst
+    num_nodes: int
+    features: np.ndarray  # (N, F) float32
+    labels: Optional[np.ndarray] = None  # (N,) int32
+    train_mask: Optional[np.ndarray] = None  # (N,) bool
+    test_mask: Optional[np.ndarray] = None  # (N,) bool
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edge_index.shape[1])
+
+
+def node_bucket(num_nodes: int, *, tile: int = MXU_TILE, slack: float = 0.0) -> int:
+    """NodePad bucket: smallest tile multiple >= num_nodes*(1+slack).
+
+    `slack` reserves headroom for dynamic node insertion (GrAd) without a
+    recompile — the paper pads Cora 2708 -> 3000; we pad to tile multiples so
+    the same capacity also satisfies the Pallas kernel grids.
+    """
+    want = int(np.ceil(num_nodes * (1.0 + slack)))
+    return int(-(-want // tile) * tile)
+
+
+def add_self_loops(edge_index: np.ndarray, num_nodes: int) -> np.ndarray:
+    loops = np.arange(num_nodes, dtype=edge_index.dtype)
+    return np.concatenate([edge_index, np.stack([loops, loops])], axis=1)
+
+
+def dense_adjacency(edge_index: np.ndarray, capacity: int, *, self_loops: bool = True,
+                    num_nodes: Optional[int] = None) -> np.ndarray:
+    """(capacity, capacity) float32 0/1 adjacency; A[dst, src] = 1.
+
+    Padded rows/cols stay zero — the paper's convention '0 = no edge' makes
+    NodePad padding semantically inert.
+    """
+    a = np.zeros((capacity, capacity), dtype=np.float32)
+    src, dst = edge_index
+    a[dst, src] = 1.0
+    if self_loops:
+        n = capacity if num_nodes is None else num_nodes
+        idx = np.arange(n)
+        a[idx, idx] = 1.0
+    return a
+
+
+def gcn_norm_adjacency(edge_index: np.ndarray, num_nodes: int, capacity: int) -> np.ndarray:
+    """PreG: Â = D^-1/2 (A + I) D^-1/2 precomputed on the host.
+
+    The sqrt/recip ops (the NPU's slow-DSP work, TPU's non-MXU scalar work)
+    happen exactly once, offline; the device only ever sees one dense matmul
+    operand. Padded nodes have degree 0 -> their norm rows/cols are 0.
+    """
+    a = dense_adjacency(edge_index, capacity, self_loops=True, num_nodes=num_nodes)
+    deg = a.sum(axis=1)
+    with np.errstate(divide="ignore"):
+        d_inv_sqrt = np.where(deg > 0, 1.0 / np.sqrt(np.maximum(deg, 1e-12)), 0.0)
+    return (d_inv_sqrt[:, None] * a * d_inv_sqrt[None, :]).astype(np.float32)
+
+
+def mean_adjacency(edge_index: np.ndarray, num_nodes: int, capacity: int,
+                   *, self_loops: bool = True) -> np.ndarray:
+    """Row-normalized adjacency (mean aggregation): D^-1 (A [+ I])."""
+    a = dense_adjacency(edge_index, capacity, self_loops=self_loops, num_nodes=num_nodes)
+    deg = a.sum(axis=1, keepdims=True)
+    return (a / np.maximum(deg, 1.0)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# SymG — triangular packing of the symmetric normalized adjacency.
+# On TPU this is a storage/transfer optimization (checkpoint + host->device
+# bytes ~halved); compute reassembles the dense matrix (see DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+def symg_pack(sym: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Pack a symmetric (N, N) matrix into its upper triangle (incl. diag)."""
+    n = sym.shape[0]
+    if not np.allclose(sym, sym.T, atol=1e-6):
+        raise ValueError("symg_pack requires a symmetric matrix")
+    iu = np.triu_indices(n)
+    return sym[iu].astype(sym.dtype), n
+
+
+def symg_unpack(packed: np.ndarray, n: int) -> np.ndarray:
+    out = np.zeros((n, n), dtype=packed.dtype)
+    iu = np.triu_indices(n)
+    out[iu] = packed
+    out = out + np.triu(out, k=1).T
+    return out
+
+
+def pad_features(x: np.ndarray, capacity: int) -> np.ndarray:
+    """NodePad: zero-pad node features to the bucket capacity."""
+    n, f = x.shape
+    if n > capacity:
+        raise ValueError(f"graph ({n} nodes) exceeds NodePad capacity {capacity}")
+    if n == capacity:
+        return x.astype(np.float32)
+    out = np.zeros((capacity, f), dtype=np.float32)
+    out[:n] = x
+    return out
+
+
+def pad_labels(y: np.ndarray, capacity: int, *, fill: int = -1) -> np.ndarray:
+    out = np.full((capacity,), fill, dtype=np.int32)
+    out[: y.shape[0]] = y
+    return out
+
+
+@dataclasses.dataclass
+class PaddedGraph:
+    """Device-ready NodePad'ded graph: every array statically (cap, ·)-shaped.
+
+    `norm_adj` is the GrAd *input* form — passed as an argument, never baked
+    into the trace — so edge updates re-run only host preprocessing, never
+    XLA compilation (the paper's recompile-free dynamic-graph path).
+    """
+
+    capacity: int
+    num_nodes: int
+    features: np.ndarray      # (cap, F)
+    norm_adj: np.ndarray      # (cap, cap)  Â (PreG-normalized)
+    adj: np.ndarray           # (cap, cap)  raw 0/1 (no self loops) for GAT masks
+    node_mask: np.ndarray     # (cap,) 1.0 for real nodes
+    labels: Optional[np.ndarray] = None
+    train_mask: Optional[np.ndarray] = None
+    test_mask: Optional[np.ndarray] = None
+
+
+def pad_graph(g: Graph, *, capacity: Optional[int] = None, slack: float = 0.0,
+              norm: str = "gcn") -> PaddedGraph:
+    cap = capacity if capacity is not None else node_bucket(g.num_nodes, slack=slack)
+    if norm == "gcn":
+        na = gcn_norm_adjacency(g.edge_index, g.num_nodes, cap)
+    elif norm == "mean":
+        na = mean_adjacency(g.edge_index, g.num_nodes, cap)
+    else:
+        raise ValueError(f"unknown norm {norm!r}")
+    mask = np.zeros((cap,), dtype=np.float32)
+    mask[: g.num_nodes] = 1.0
+
+    def _pad_bool(m):
+        if m is None:
+            return None
+        out = np.zeros((cap,), dtype=bool)
+        out[: g.num_nodes] = m
+        return out
+
+    return PaddedGraph(
+        capacity=cap,
+        num_nodes=g.num_nodes,
+        features=pad_features(g.features, cap),
+        norm_adj=na,
+        adj=dense_adjacency(g.edge_index, cap, self_loops=False),
+        node_mask=mask,
+        labels=None if g.labels is None else pad_labels(g.labels, cap),
+        train_mask=_pad_bool(g.train_mask),
+        test_mask=_pad_bool(g.test_mask),
+    )
+
+
+def update_edges(pg: PaddedGraph, edge_index: np.ndarray, num_nodes: int,
+                 *, norm: str = "gcn") -> PaddedGraph:
+    """GrAd: rebuild only the runtime mask inputs for an evolved graph.
+
+    No recompilation: shapes are unchanged (same capacity), only array
+    *values* change. Raises if the graph outgrew its bucket (the caller then
+    re-buckets — the one legitimate recompile).
+    """
+    if num_nodes > pg.capacity:
+        raise ValueError(
+            f"graph grew to {num_nodes} nodes > capacity {pg.capacity}; re-bucket")
+    if norm == "gcn":
+        na = gcn_norm_adjacency(edge_index, num_nodes, pg.capacity)
+    else:
+        na = mean_adjacency(edge_index, num_nodes, pg.capacity)
+    mask = np.zeros((pg.capacity,), dtype=np.float32)
+    mask[:num_nodes] = 1.0
+    return dataclasses.replace(
+        pg, num_nodes=num_nodes, norm_adj=na,
+        adj=dense_adjacency(edge_index, pg.capacity, self_loops=False),
+        node_mask=mask)

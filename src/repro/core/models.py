@@ -1,0 +1,200 @@
+"""Paper models: 2-layer GCN / GAT / GraphSAGE for node classification.
+
+Matches the paper's Section V setup: hidden width 64 (GAT: 8 heads x 8),
+trained with Adam-style optimization, evaluated top-1 on a held-out mask.
+Both execution paths (baseline edge-list vs GraNNite dense) share the SAME
+parameters, so the benchmark harness compares *implementations*, never
+different models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, masks
+from .graph import PaddedGraph
+from .layers import Techniques
+from .quant import QuantizedLinear, quantize_linear
+from .sparsity import BlockSparse, to_block_sparse
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    kind: str                  # "gcn" | "gat" | "sage"
+    in_feats: int
+    hidden: int = 64
+    num_classes: int = 7
+    heads: int = 8             # GAT only (hidden per-head = hidden // heads)
+    aggregator: str = "mean"   # SAGE only: "mean" | "max"
+    max_neighbors: int = 10    # SAGE sampling cap (paper: 10)
+
+
+def init_params(key, cfg: GNNConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    if cfg.kind == "gcn":
+        return {"l1": layers.gcn_init(k1, cfg.in_feats, cfg.hidden),
+                "l2": layers.gcn_init(k2, cfg.hidden, cfg.num_classes)}
+    if cfg.kind == "gat":
+        per_head = cfg.hidden // cfg.heads
+        return {"l1": layers.gat_init(k1, cfg.in_feats, per_head, cfg.heads),
+                "l2": layers.gat_init(k2, cfg.heads * per_head, cfg.num_classes, 1)}
+    if cfg.kind == "sage":
+        return {"l1": layers.sage_init(k1, cfg.in_feats, cfg.hidden,
+                                       aggregator=cfg.aggregator),
+                "l2": layers.sage_init(k2, cfg.hidden, cfg.num_classes,
+                                       aggregator=cfg.aggregator)}
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward_baseline(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
+                     edge_index: jnp.ndarray, num_nodes: int) -> jnp.ndarray:
+    if cfg.kind == "gcn":
+        h = jax.nn.relu(layers.gcn_baseline(params["l1"], x, edge_index, num_nodes))
+        return layers.gcn_baseline(params["l2"], h, edge_index, num_nodes)
+    if cfg.kind == "gat":
+        per_head = cfg.hidden // cfg.heads
+        h = jax.nn.elu(layers.gat_baseline(params["l1"], x, edge_index, num_nodes,
+                                           heads=cfg.heads, out_feats=per_head))
+        return layers.gat_baseline(params["l2"], h, edge_index, num_nodes,
+                                   heads=1, out_feats=cfg.num_classes)
+    if cfg.kind == "sage":
+        h = jax.nn.relu(layers.sage_baseline(params["l1"], x, edge_index, num_nodes,
+                                             aggregator=cfg.aggregator))
+        return layers.sage_baseline(params["l2"], h, edge_index, num_nodes,
+                                    aggregator=cfg.aggregator)
+    raise ValueError(cfg.kind)
+
+
+@dataclasses.dataclass
+class GranniteOperands:
+    """Host-precomputed (GraphSplit/PreG/StaGr) dense operands.
+
+    For GrAd these are *arguments*; for StaGr-static callers may close over
+    them. Building this object is the 'CPU side' of GraphSplit.
+    """
+    norm_adj: jnp.ndarray                 # (cap, cap) PreG-normalized
+    mask_mult: jnp.ndarray                # GAT exact multiplicative mask
+    bias_add: jnp.ndarray                 # GrAx1 additive mask
+    sample_mask: jnp.ndarray              # SAGE sampled 0/1 adjacency
+    mean_mask: jnp.ndarray                # row-normalized sample mask
+    block_sparse: Optional[BlockSparse] = None  # GraSp compacted Â
+    quant: Optional[Dict[str, QuantizedLinear]] = None  # QuantGr layers
+
+
+def build_operands(pg: PaddedGraph, cfg: GNNConfig, *, grasp: bool = False,
+                   rng: Optional[np.random.Generator] = None) -> GranniteOperands:
+    awl = masks.adj_with_self_loops(pg.adj, pg.num_nodes)
+    sample = masks.sage_sample_adjacency(pg.adj, pg.num_nodes,
+                                         max_neighbors=cfg.max_neighbors, rng=rng)
+    return GranniteOperands(
+        norm_adj=jnp.asarray(pg.norm_adj),
+        mask_mult=jnp.asarray(masks.attention_bias_multiplicative(awl)),
+        bias_add=jnp.asarray(masks.attention_bias_additive(awl)),
+        sample_mask=jnp.asarray(sample),
+        mean_mask=jnp.asarray(masks.mean_from_mask(sample)),
+        block_sparse=to_block_sparse(pg.norm_adj) if grasp else None,
+    )
+
+
+def calibrate_quant(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
+                    ops_: GranniteOperands) -> Dict:
+    """QuantGr static calibration — whole GCN datapath (combine matmuls AND
+    the aggregation Â@H, which dominates FLOPs at 2·N²·H)."""
+    from .quant import quantize_agg
+    if cfg.kind != "gcn":
+        raise NotImplementedError("QuantGr calibration wired for GCN (paper Fig. 20)")
+    pre1 = x @ params["l1"]["w"]
+    h1 = jax.nn.relu(layers.gcn_grannite(params["l1"], x, ops_.norm_adj,
+                                         Techniques(stagr=True)))
+    pre2 = h1 @ params["l2"]["w"]
+    return {"l1": quantize_linear(params["l1"]["w"], x),
+            "l2": quantize_linear(params["l2"]["w"], h1),
+            "agg1": quantize_agg(ops_.norm_adj, pre1),
+            "agg2": quantize_agg(ops_.norm_adj, pre2)}
+
+
+def forward_grannite(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
+                     ops_: GranniteOperands, t: Techniques) -> jnp.ndarray:
+    if cfg.kind == "gcn":
+        q = ops_.quant or {}
+        h = jax.nn.relu(layers.gcn_grannite(
+            params["l1"], x, ops_.norm_adj, t, quant=q.get("l1"),
+            quant_agg=q.get("agg1"), block_sparse=ops_.block_sparse))
+        return layers.gcn_grannite(params["l2"], h, ops_.norm_adj, t,
+                                   quant=q.get("l2"),
+                                   quant_agg=q.get("agg2"),
+                                   block_sparse=ops_.block_sparse)
+    if cfg.kind == "gat":
+        per_head = cfg.hidden // cfg.heads
+        h = jax.nn.elu(layers.gat_grannite(
+            params["l1"], x, ops_.mask_mult, ops_.bias_add, t,
+            heads=cfg.heads, out_feats=per_head))
+        return layers.gat_grannite(params["l2"], h, ops_.mask_mult, ops_.bias_add,
+                                   t, heads=1, out_feats=cfg.num_classes)
+    if cfg.kind == "sage":
+        h = jax.nn.relu(layers.sage_grannite(
+            params["l1"], x, ops_.sample_mask, ops_.mean_mask, t,
+            aggregator=cfg.aggregator))
+        return layers.sage_grannite(params["l2"], h, ops_.sample_mask,
+                                    ops_.mean_mask, t, aggregator=cfg.aggregator)
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Training / evaluation (to reproduce the paper's accuracy table)
+# ---------------------------------------------------------------------------
+
+def masked_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                         mask: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[:, None], axis=-1)[:, 0]
+    m = mask.astype(logits.dtype)
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    pred = jnp.argmax(logits, axis=-1)
+    ok = (pred == labels) & mask
+    return ok.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def train_node_classifier(key, cfg: GNNConfig, pg: PaddedGraph,
+                          forward: Callable[[Dict, jnp.ndarray], jnp.ndarray],
+                          params: Optional[Dict] = None, *, lr: float = 0.01,
+                          weight_decay: float = 5e-4, epochs: int = 100) -> Dict:
+    """Full-batch Adam training (paper: lr 0.01, wd 5e-4, 100 epochs)."""
+    from repro.optim.adamw import adamw_init, adamw_update
+
+    x = jnp.asarray(pg.features)
+    y = jnp.asarray(pg.labels)
+    tm = jnp.asarray(pg.train_mask)
+    params = params if params is not None else init_params(key, cfg)
+    opt = adamw_init(params)
+
+    def loss_fn(p):
+        return masked_cross_entropy(forward(p, x), y, tm)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p, o = adamw_update(p, g, o, lr=lr, weight_decay=weight_decay)
+        return p, o, loss
+
+    for _ in range(epochs):
+        params, opt, _ = step(params, opt)
+    return params
+
+
+def evaluate(cfg: GNNConfig, params: Dict, pg: PaddedGraph,
+             forward: Callable[[Dict, jnp.ndarray], jnp.ndarray]) -> float:
+    logits = forward(params, jnp.asarray(pg.features))
+    return float(accuracy(logits, jnp.asarray(pg.labels), jnp.asarray(pg.test_mask)))

@@ -1,0 +1,5 @@
+from .graphs import cora_like, citeseer_like, dynamic_graph_stream, planetoid_like
+from .synthetic import TokenStream, lm_batch_iterator
+
+__all__ = ["cora_like", "citeseer_like", "planetoid_like",
+           "dynamic_graph_stream", "TokenStream", "lm_batch_iterator"]

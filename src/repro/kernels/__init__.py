@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+<name>.py = pl.pallas_call + BlockSpec; ops.py = jit'd wrappers with backend
+routing; ref.py = pure-jnp oracles the tests assert_allclose against.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

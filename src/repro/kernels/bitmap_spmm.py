@@ -1,0 +1,84 @@
+"""GraSp block-sparse SpMM: Â @ H skipping zero 128x128 blocks.
+
+The TPU-native realization of the paper's sparsity bitmap (Fig. 13): the host
+compacts Â's non-zero blocks (`repro.core.sparsity.to_block_sparse`) and this
+kernel visits ONLY those. The block-column indices live in SMEM via scalar
+prefetch and drive the *index maps* — the same mechanism the NPU's bitmap
+uses to steer its DMA engine: data-dependent block fetch, zero wasted MACs.
+
+Grid: (row_blocks, F/bf, max_nnz). The k axis walks each block-row's
+compacted non-zero list; rows with fewer blocks mask the tail via pl.when
+(counts in SMEM), so padded entries cost a skipped grid step, never a matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BF = 128
+
+
+def _spmm_kernel(counts_ref, cols_ref, blocks_ref, h_ref, o_ref, acc_ref, *,
+                 max_nnz: int):
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Skip padded tail entries: only counts_ref[i] blocks are real.
+    @pl.when(k < counts_ref[i])
+    def _mac():
+        acc_ref[...] += jnp.dot(blocks_ref[0], h_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == max_nnz - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "bf", "interpret"))
+def bitmap_spmm(blocks: jnp.ndarray, block_cols: jnp.ndarray,
+                counts: jnp.ndarray, h: jnp.ndarray, *, block_size: int = 128,
+                bf: int = DEFAULT_BF, interpret: bool = False) -> jnp.ndarray:
+    """out = Â @ h from the compacted block form.
+
+    blocks:     (rb * max_nnz, bs, bs) gathered non-zero blocks.
+    block_cols: (rb, max_nnz) int32 column-block index per entry.
+    counts:     (rb,) int32 number of real entries per block-row.
+    h:          (N, F) dense right-hand side; N = cb * bs, F % bf == 0.
+    """
+    bs = block_size
+    rb, max_nnz = block_cols.shape
+    n, f = h.shape
+    assert blocks.shape == (rb * max_nnz, bs, bs), (blocks.shape, rb, max_nnz)
+    assert n % bs == 0 and f % bf == 0, (h.shape, bs, bf)
+
+    grid = (rb, f // bf, max_nnz)
+    kernel = functools.partial(_spmm_kernel, max_nnz=max_nnz)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # counts, block_cols -> SMEM, feed index maps
+            grid=grid,
+            in_specs=[
+                # compacted block list: entry (i * max_nnz + k)
+                pl.BlockSpec((1, bs, bs),
+                             lambda i, j, k, counts, cols: (i * max_nnz + k, 0, 0)),
+                # H row-block chosen BY THE BITMAP: cols[i, k] — the
+                # data-dependent fetch that skips zero blocks entirely.
+                pl.BlockSpec((bs, bf),
+                             lambda i, j, k, counts, cols: (cols[i, k], j)),
+            ],
+            out_specs=pl.BlockSpec((bs, bf),
+                                   lambda i, j, k, counts, cols: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bs, bf), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((rb * bs, f), h.dtype),
+        interpret=interpret,
+    )(counts, block_cols, blocks, h)

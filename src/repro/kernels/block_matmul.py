@@ -1,0 +1,60 @@
+"""MXU-tiled dense matmul — the StaGr aggregation backbone.
+
+StaGr's whole point is that aggregation becomes `Â @ H`: a plain matmul the
+systolic array executes at peak. This kernel is the TPU-native form: grid
+(M/bm, N/bn, K/bk) with the K dimension innermost (output-block revisiting),
+fp32 VMEM accumulator, blocks aligned to the 128x128 MXU tile (NodePad
+guarantees M, K are 128-multiples for graph operands).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = (128, 128, 128)  # (bm, bn, bk)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
+def block_matmul(a: jnp.ndarray, b: jnp.ndarray, *,
+                 block: tuple = DEFAULT_BLOCK, interpret: bool = False,
+                 out_dtype=None) -> jnp.ndarray:
+    """C = A @ B with explicit VMEM tiling. Shapes must divide the blocks."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = block
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"shape ({m},{k})x({k},{n}) not divisible by block {(bm, bn, bk)}"
+    out_dtype = out_dtype or a.dtype
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,131 @@
+"""Block-streaming (flash) GQA attention for the LM substrate.
+
+TPU-target kernel for the attention hot-spot of the assigned LM archs:
+online-softmax over KV blocks, causal and/or sliding-window masking computed
+from block indices (never materializing an (Sq, Skv) mask), optional gemma2
+tanh logit soft-capping. GQA is expressed through the index maps: query head
+hd reads KV head hd // group — no jnp.repeat materialization.
+
+Grid: (B, H, Sq/bq, Skv/bk), KV innermost so the (bq, d) accumulator and the
+(bq, 1) running max/denominator live in VMEM across the KV sweep. Fully
+masked blocks (beyond causal frontier / outside the window) are skipped with
+pl.when — the same "skip what the mask says is zero" move as GraSp, applied
+to the attention schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e9
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], bq: int, bk: int, kv_steps: int,
+                  q_offset: int):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * bq + q_offset          # absolute positions of this q block
+    k_start = jk * bk
+
+    # Block-level skip: entirely above the causal diagonal, or entirely
+    # outside the sliding window -> no compute at all for this block.
+    needed = True
+    if causal:
+        needed = jnp.asarray(k_start <= q_start + bq - 1)
+    else:
+        needed = jnp.asarray(True)
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, k_start + bk - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[...][0, :, 0, :]                    # (bq, d)
+        k = k_ref[...][0, :, 0, :]                    # (bk, d)
+        v = v_ref[...][0, :, 0, :]                    # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                # rescale factor
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jk == kv_steps - 1)
+    def _store():
+        denom = jnp.maximum(l_ref[...], 1e-12)
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)[None, :, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "bq", "bk", "q_offset", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None, q_offset: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D); H % KV == 0 -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, skv, kv, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    bq_, bk_ = min(bq, sq), min(bk, skv)
+    assert sq % bq_ == 0 and skv % bk_ == 0, (sq, skv, bq_, bk_)
+    scale_ = scale if scale is not None else d ** -0.5
+    kv_steps = skv // bk_
+    grid = (b, h, sq // bq_, kv_steps)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale_, causal=causal, window=window,
+        softcap=softcap, bq=bq_, bk=bk_, kv_steps=kv_steps, q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, 1, d), lambda bb, hd, iq, jk: (bb, iq, hd, 0)),
+            pl.BlockSpec((1, bk_, 1, d),
+                         lambda bb, hd, iq, jk: (bb, jk, hd // group, 0)),
+            pl.BlockSpec((1, bk_, 1, d),
+                         lambda bb, hd, iq, jk: (bb, jk, hd // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, 1, d), lambda bb, hd, iq, jk: (bb, iq, hd, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, d), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,64 @@
+"""Fused GAT attention — the paper's EffOp + GrAx1 + GrAx2 pipeline, one pass.
+
+Per (head, row-block): scores = leaky_relu(alpha_dst ⊕ alpha_src) + bias
+(GrAx2 fused broadcast-add; GrAx1 additive mask — no Select, no multiply),
+row softmax, then attn @ H aggregation on the MXU. The entire score matrix
+row-strip (bm, N) stays in VMEM — it is produced, normalized, and consumed
+without ever round-tripping to HBM, which is the Pallas analogue of keeping
+the intermediate attention map out of DRAM (the paper's DSP<->DRAM traffic).
+
+Grid: (H, N/bm). NodePad guarantees N % 128 == 0; F (per-head feature dim)
+is zero-padded to the lane width by `ops.gat_attention` when needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+
+
+def _gat_kernel(ad_ref, as_ref, bias_ref, h_ref, o_ref, *, negative_slope: float):
+    # ad: (bm, 1) this row-block's dst terms for this head
+    # as: (N, 1) all src terms for this head; bias: (bm, N); h: (N, 1, F)
+    ad = ad_ref[...]                      # (bm, 1)
+    a_src = as_ref[...][:, 0]             # (N,)
+    e = ad + a_src[None, :]               # GrAx2: single fused broadcast-add
+    e = jnp.where(e >= 0, e, negative_slope * e)          # leaky_relu
+    e = e + bias_ref[...]                 # GrAx1: additive mask, no Select
+    e = e - jnp.max(e, axis=1, keepdims=True)
+    p = jnp.exp(e)
+    attn = p / jnp.maximum(p.sum(axis=1, keepdims=True), 1e-12)
+    h = h_ref[...][:, 0, :]               # (N, F)
+    o_ref[...] = jnp.dot(attn.astype(h.dtype), h,
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "negative_slope", "interpret"))
+def gat_attention(h: jnp.ndarray, alpha_dst: jnp.ndarray, alpha_src: jnp.ndarray,
+                  bias_add: jnp.ndarray, *, bm: int = DEFAULT_BM,
+                  negative_slope: float = 0.2,
+                  interpret: bool = False) -> jnp.ndarray:
+    """h: (N, H, F), alpha_*: (N, H), bias_add: (N, N) -> out (N, H, F)."""
+    n, heads, f = h.shape
+    assert alpha_dst.shape == (n, heads) and bias_add.shape == (n, n)
+    bm = min(bm, n)
+    assert n % bm == 0, (n, bm)
+    grid = (heads, n // bm)
+    return pl.pallas_call(
+        functools.partial(_gat_kernel, negative_slope=negative_slope),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda hd, i: (i, hd)),       # alpha_dst
+            pl.BlockSpec((n, 1), lambda hd, i: (0, hd)),        # alpha_src (all)
+            pl.BlockSpec((bm, n), lambda hd, i: (i, 0)),        # bias row strip
+            pl.BlockSpec((n, 1, f), lambda hd, i: (0, hd, 0)),  # h, this head
+        ],
+        out_specs=pl.BlockSpec((bm, 1, f), lambda hd, i: (i, hd, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, heads, f), h.dtype),
+        interpret=interpret,
+    )(alpha_dst, alpha_src, bias_add, h)

@@ -1,0 +1,70 @@
+"""QuantGr INT8 datapath: int8 x int8 -> int32 MXU matmul with static scales.
+
+The NPU's INT8 path gives 2x TOPs / 4x TOPs-per-watt over FP16; the TPU MXU
+likewise doubles int8 throughput. The kernel accumulates in int32 in VMEM
+(never narrower — QuantGr is *symmetric static*, so overflow is bounded by
+bk*127*127 per partial, well inside int32 for bk <= 2^16) and applies the
+per-tensor activation scale x per-output-channel weight scale at the final
+store, fusing dequantization into the matmul epilogue.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+def _int8_kernel(x_ref, w_ref, sw_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        # epilogue: int32 -> fp32 dequant; sw already folds x_scale*w_scale
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) * sw_ref[...]
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def int8_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale: jnp.ndarray,
+                w_scale: jnp.ndarray, *, block: tuple = DEFAULT_BLOCK,
+                interpret: bool = False) -> jnp.ndarray:
+    """(M,K)int8 @ (K,N)int8 * x_scale * w_scale[N] -> (M,N)float32."""
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2 and xq.dtype == jnp.int8 and wq.dtype == jnp.int8
+    bm, bn, bk = block
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"int8_matmul: ({m},{k})x({k},{n}) vs block {(bm, bn, bk)}"
+    k_steps = k // bk
+    # Fuse the per-tensor activation scale into the per-channel weight scales
+    # so the epilogue is one multiply. Scales remain runtime *inputs* (GrAd
+    # spirit: values never baked into the trace; QuantGr's "static" refers to
+    # calibration time, not compile-time constants).
+    sw = (jnp.asarray(w_scale).reshape(1, n)
+          * jnp.asarray(x_scale)).astype(jnp.float32)
+    kernel = functools.partial(_int8_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, bn), lambda i, j, s: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xq, wq, sw)

@@ -1,0 +1,134 @@
+"""Public kernel entry points with backend routing.
+
+Routing policy (documented in DESIGN.md §6):
+
+  * backend == "tpu"            -> real Pallas kernels (MXU tiling).
+  * REPRO_PALLAS_INTERPRET=1    -> Pallas kernels in interpret mode (CPU
+                                   correctness validation; what the tests use).
+  * otherwise (CPU dry-run)     -> pure-jnp reference path. Same math, same
+                                   FLOPs in cost_analysis, no TPU-only lowering
+                                   — the multi-pod dry-run compiles this.
+
+Every wrapper pads operands to kernel tile multiples when needed and strips
+the padding from the result (NodePad makes this a no-op for graph operands).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitmap_spmm import bitmap_spmm as _bitmap_spmm_kernel
+from .block_matmul import block_matmul as _block_matmul
+from .flash_attention import flash_attention as _flash_kernel
+from .gat_attention import gat_attention as _gat_kernel
+from .int8_matmul import int8_matmul as _int8_kernel
+from .sage_max import sage_max as _sage_max_kernel
+
+
+def _mode() -> str:
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return "interpret"
+    return "ref"
+
+
+def _pad2(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None) -> jnp.ndarray:
+    """StaGr aggregation backbone: C = A @ B (MXU-tiled on TPU)."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.matmul_ref(a, b, out_dtype=out_dtype)
+    m, k = a.shape
+    _, n = b.shape
+    ap, bp = _pad2(a, 128, 128), _pad2(b, 128, 128)
+    out = _block_matmul(ap, bp, interpret=(mode == "interpret"),
+                        out_dtype=out_dtype or a.dtype)
+    return out[:m, :n]
+
+
+def int8_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale, w_scale) -> jnp.ndarray:
+    """QuantGr INT8 datapath."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.int8_matmul_ref(xq, wq, x_scale, w_scale)
+    m, k = xq.shape
+    _, n = wq.shape
+    xp, wp = _pad2(xq, 128, 128), _pad2(wq, 128, 128)
+    sp = jnp.pad(jnp.asarray(w_scale), (0, (-n) % 128))
+    out = _int8_kernel(xp, wp, x_scale, sp, interpret=(mode == "interpret"))
+    return out[:m, :n]
+
+
+def bitmap_spmm(block_sparse, h: jnp.ndarray) -> jnp.ndarray:
+    """GraSp block-sparse aggregation; `block_sparse` from to_block_sparse."""
+    mode = _mode()
+    if mode == "ref":
+        from repro.core.sparsity import from_block_sparse
+        dense = jnp.asarray(from_block_sparse(block_sparse))
+        return ref.bitmap_spmm_ref(dense, h)
+    n, f = h.shape
+    hp = _pad2(h, block_sparse.block_size, 128)
+    out = _bitmap_spmm_kernel(
+        jnp.asarray(block_sparse.blocks), jnp.asarray(block_sparse.block_cols),
+        jnp.asarray(block_sparse.counts), hp,
+        block_size=block_sparse.block_size, interpret=(mode == "interpret"))
+    return out[: block_sparse.shape[0], :f]
+
+
+def gat_attention(h: jnp.ndarray, alpha_dst: jnp.ndarray, alpha_src: jnp.ndarray,
+                  bias_add: jnp.ndarray) -> jnp.ndarray:
+    """Fused EffOp+GrAx1+GrAx2 GAT layer."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.gat_attention_ref(h, alpha_dst, alpha_src, bias_add)
+    n, heads, f = h.shape
+    fpad = (-f) % 128
+    hp = jnp.pad(h, ((0, 0), (0, 0), (0, fpad))) if fpad else h
+    out = _gat_kernel(hp, alpha_dst, alpha_src, bias_add,
+                      interpret=(mode == "interpret"))
+    return out[:, :, :f]
+
+
+def sage_max(mask01: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """GrAx3 masked max aggregation."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.sage_max_ref(mask01, h)
+    n, f = h.shape
+    hp = _pad2(h, 128, 128)
+    out = _sage_max_kernel(mask01, hp, interpret=(mode == "interpret"))
+    return out[:n, :f]
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """GQA attention: Pallas flash kernel on TPU, exact oracle elsewhere.
+
+    NOTE: the LM substrate's *dry-run* path does not call this for long
+    sequences — it uses `repro.nn.attention.chunked_attention` (pure-JAX
+    online softmax) so 32k/500k prefill compiles without O(S^2) buffers on
+    any backend. This wrapper is the TPU hot-spot entry.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       softcap=softcap, scale=scale,
+                                       q_offset=q_offset)
+    return _flash_kernel(q, k, v, causal=causal, window=window, softcap=softcap,
+                         scale=scale, q_offset=q_offset,
+                         interpret=(mode == "interpret"))

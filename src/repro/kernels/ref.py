@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` is the semantic ground truth: simple, obviously-correct jnp.
+Kernel tests sweep shapes/dtypes and `assert_allclose(kernel, ref)`; `ops.py`
+also uses these as the CPU fallback path (the dry-run compiles these — same
+FLOPs, no TPU-only lowering).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None) -> jnp.ndarray:
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def int8_matmul_ref(xq: jnp.ndarray, wq: jnp.ndarray, x_scale: jnp.ndarray,
+                    w_scale: jnp.ndarray) -> jnp.ndarray:
+    """INT8 x INT8 -> INT32 accumulate -> FP32 rescale."""
+    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (x_scale * w_scale)
+
+
+def bitmap_spmm_ref(dense_a: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """GraSp oracle: the block-compacted form must equal the dense matmul."""
+    return (dense_a @ h).astype(h.dtype)
+
+
+def gat_attention_ref(h: jnp.ndarray, alpha_dst: jnp.ndarray,
+                      alpha_src: jnp.ndarray, bias_add: jnp.ndarray,
+                      *, negative_slope: float = 0.2) -> jnp.ndarray:
+    """Fused GAT oracle (EffOp + GrAx1 + GrAx2 dense formulation).
+
+    h: (N, H, F); alpha_dst/alpha_src: (N, H); bias_add: (N, N) 0 / -1e9.
+    out[i, hd] = sum_j softmax_j(leaky(ad[i,hd]+as[j,hd]) + bias[i,j]) h[j,hd].
+    """
+    e = alpha_dst[:, None, :] + alpha_src[None, :, :]            # (N, N, H)
+    e = jax.nn.leaky_relu(e, negative_slope=negative_slope)
+    e = e + bias_add[:, :, None]
+    e = e - jnp.max(e, axis=1, keepdims=True)
+    p = jnp.exp(e)
+    attn = p / jnp.maximum(p.sum(axis=1, keepdims=True), 1e-12)  # (N, N, H)
+    return jnp.einsum("ijh,jhf->ihf", attn, h)
+
+
+def sage_max_ref(mask01: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """GrAx3 oracle: out[i,f] = max_j mask[i,j] * h[j,f] (h assumed >= 0;
+    isolated rows -> 0, matching the paper's DPU max-pool semantics)."""
+    prod = mask01[:, :, None] * h[None, :, :]
+    return jnp.max(prod, axis=1)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """Exact GQA attention oracle.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with H % KV == 0.
+    `q_offset`: absolute position of q[0] (decode: Skv-1 typically).
+    `window`: sliding-window size (attend to keys within `window` positions).
+    `softcap`: gemma2-style tanh logit soft capping.
+    """
+    b, sq, hh, d = q.shape
+    _, skv, kv, _ = k.shape
+    group = hh // kv
+    scale = scale if scale is not None else d ** -0.5
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", attn.astype(vr.dtype), vr)
+    return out.astype(q.dtype)

@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede every other import (including
+# `from repro...`): jax locks the device count at first init. Only the
+# dry-run sees 512 placeholder devices; tests/benches keep 1 CPU device.
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCHS               # noqa: E402
+from repro.dist import sharding as shd        # noqa: E402
+from repro.launch import roofline as R        # noqa: E402
+from repro.launch import specs as S           # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.nn.config import SHAPES            # noqa: E402
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell:
+  jax.jit(step, in_shardings, out_shardings).lower(*ShapeDtypeStructs)
+      .compile()
+must succeed; we then print memory_analysis() (fits-on-chip proof) and
+cost_analysis() (FLOPs/bytes for §Roofline) and emit one JSON row.
+
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+"""
+
+
+def _data_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in shd.mesh_batch_axes(mesh)]))
+
+
+def lower_cell(cfg, shape_name: str, mesh, *,
+               microbatches: Optional[int] = None):
+    """Build + lower one cell. Returns (lowered, aux_info)."""
+    shape = SHAPES[shape_name]
+    params = S.abstract_params(cfg, serve=(shape.kind != "train"))
+    pshard = shd.param_shardings(params, mesh)
+
+    if shape.kind == "train":
+        opt = S.abstract_opt(cfg)
+        osh = shd.optimizer_shardings(params, mesh)
+        oshard = {"m": osh, "v": osh, "count": shd.scalar_sharding(mesh)}
+        batch = S.train_batch_specs(cfg, shape)
+        bshard = shd.batch_shardings(batch, mesh)
+        mb = (microbatches if microbatches is not None
+              else S.train_microbatches(cfg, shape, _data_size(mesh)))
+        step_fn = S.make_train_step(cfg, microbatches=mb)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(pshard, oshard, bshard, None),
+                         out_shardings=(pshard, oshard, None))
+        lowered = jitted.lower(params, opt, batch,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        return lowered, {"microbatches": mb}
+
+    if shape.kind == "prefill":
+        batch = S.prefill_specs(cfg, shape)
+        bshard = shd.batch_shardings(batch, mesh)
+        step_fn = S.make_prefill_step(cfg, shape)
+        jitted = jax.jit(step_fn, in_shardings=(pshard, bshard))
+        lowered = jitted.lower(params, batch)
+        return lowered, {}
+
+    # decode
+    specs = S.decode_specs(cfg, shape)
+    seq_sharded = shape.global_batch < _data_size(mesh)
+
+    def nshard(tree):
+        spec = shd.cache_specs(tree, mesh, seq_sharded=seq_sharded)
+        return jax.tree_util.tree_map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), spec,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    tok_sh = jax.sharding.NamedSharding(
+        mesh, shd.batch_spec(mesh, ndim=1)
+        if shape.global_batch % _data_size(mesh) == 0
+        else jax.sharding.PartitionSpec())
+    step_fn = S.make_serve_step(cfg, shape)
+    args = [params, specs["caches"], specs["token"], specs["pos"]]
+    in_sh = [pshard, nshard(specs["caches"]), tok_sh,
+             shd.scalar_sharding(mesh)]
+    if "enc_kv" in specs:
+        args.append(specs["enc_kv"])
+        in_sh.append(nshard(specs["enc_kv"]))
+    # donate the caches: the in-place GrAd cursor update aliases input ->
+    # output and HBM holds ONE cache copy (without this, gemma2 decode_32k
+    # needs 24 GiB/dev; with it, ~12 GiB)
+    jitted = jax.jit(step_fn, in_shardings=tuple(in_sh), donate_argnums=(1,))
+    lowered = jitted.lower(*args)
+    return lowered, {"seq_sharded_cache": seq_sharded}
+
+
+def measure_cost_metrics(cfg, shape_name: str, mesh,
+                         ) -> Dict[str, Any]:
+    """Two-point unrolled measurement -> exact per-device cost metrics.
+
+    See specs.cost_config: M_k = F + k·B per metric; the deployed stack
+    costs F + nsb·B. Collective bytes are combined per collective kind.
+    """
+    points = []
+    for k in (1, 2):
+        ccfg = S.cost_config(cfg, k)
+        lowered, _ = lower_cell(ccfg, shape_name, mesh, microbatches=1)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        coll = R.collective_bytes(compiled.as_text())
+        points.append({"flops": float(ca.get("flops", 0.0)),
+                       "bytes": float(ca.get("bytes accessed", 0.0)),
+                       "coll": coll})
+    nsb = cfg.num_superblocks
+    out: Dict[str, Any] = {}
+    for key in ("flops", "bytes"):
+        b = points[1][key] - points[0][key]
+        f = points[0][key] - b
+        out[key] = max(f + nsb * b, 0.0)
+    kinds = set(points[0]["coll"]) | set(points[1]["coll"])
+    coll_true = {}
+    for kd in kinds:
+        m1 = points[0]["coll"].get(kd, 0)
+        m2 = points[1]["coll"].get(kd, 0)
+        b = m2 - m1
+        coll_true[kd] = max((m1 - b) + nsb * b, 0)
+    out["coll"] = coll_true
+    return out
+
+
+def apply_variant(cfg, variant: str, mesh):
+    """§Perf variants (baseline = paper-faithful, everything off).
+
+      opt        — attn block-skip + bf16 scores + adaptive expert axis
+      opt_f32s   — same but fp32 scores (isolates the score-dtype bytes:
+                   score_bytes_bf16 = M(opt_f32s) - M(opt), which is also
+                   the flash-kernel adjustment — see EXPERIMENTS.md §Perf)
+    """
+    import dataclasses as dc
+    if variant == "baseline":
+        shd.set_expert_axis("data")
+        return cfg
+    shd.set_expert_axis(shd.choose_expert_axis(cfg, mesh))
+    if variant == "opt":
+        return dc.replace(cfg, attn_block_skip=True, logits_bf16=True)
+    if variant == "opt_f32s":
+        return dc.replace(cfg, attn_block_skip=True, logits_bf16=False)
+    if variant == "opt_flash":
+        # memory-term measurement for the Pallas flash-kernel path: the
+        # reported t_memory is valid; t_compute/t_collective come from "opt"
+        return dc.replace(cfg, attn_block_skip=True, attn_flash_stub=True)
+    raise ValueError(variant)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             verbose: bool = True, with_cost: bool = True,
+             variant: str = "baseline") -> Dict[str, Any]:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = S.runnable(cfg, shape)
+    row: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "variant": variant}
+    if not ok:
+        row["status"] = "skipped"
+        row["reason"] = why
+        return row
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    cfg = apply_variant(cfg, variant, mesh)
+    t0 = time.time()
+    try:
+        with mesh, shd.use_distribution(mesh):
+            lowered, aux = lower_cell(cfg, shape_name, mesh)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            terms = R.extract_terms(
+                compiled, arch=arch, shape=shape, mesh_name=mesh_name,
+                n_devices=mesh.size, cfg=cfg)
+            if with_cost:
+                exact = measure_cost_metrics(cfg, shape_name, mesh)
+                terms.flops_per_device = exact["flops"]
+                terms.bytes_per_device = exact["bytes"]
+                terms.coll_breakdown = exact["coll"]
+                terms.coll_bytes_per_device = sum(exact["coll"].values())
+    except Exception as e:  # a failing cell is a bug in our system
+        row["status"] = "FAILED"
+        row["error"] = f"{type(e).__name__}: {e}"
+        row["traceback"] = traceback.format_exc()[-2000:]
+        return row
+
+    row.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), devices=mesh.size, **aux)
+    row.update(terms.row())
+    if ma is not None:
+        row["memory_analysis"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "peak_estimate_gib": round(
+                (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / 2**30, 3),
+        }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] "
+              f"compile={row['compile_s']}s "
+              f"args/dev={row['memory_analysis']['argument_bytes']/2**30:.2f}GiB "
+              f"temp/dev={row['memory_analysis']['temp_bytes']/2**30:.2f}GiB "
+              f"t=({R.fmt_seconds(row['t_compute_s'])}, "
+              f"{R.fmt_seconds(row['t_memory_s'])}, "
+              f"{R.fmt_seconds(row['t_collective_s'])}) "
+              f"bound={row['bottleneck']} "
+              f"roofline={row['roofline_fraction']:.1%}")
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="deployment compile only (no two-point cost pass)")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "opt", "opt_f32s", "opt_flash"],
+                    help="§Perf variant (baseline = paper-faithful)")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                for m in meshes:
+                    cells.append((a, s, m))
+    else:
+        assert args.arch, "--arch (+ optional --shape) or --all"
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for s in shapes:
+            for m in meshes:
+                cells.append((args.arch, s, m))
+
+    rows = []
+    for a, s, m in cells:
+        # cost pass runs on the single-pod mesh only (§Roofline is single-pod)
+        row = run_cell(a, s, m, with_cost=(not args.skip_cost and m == "single"),
+                       variant=args.variant)
+        rows.append(row)
+        if row.get("status") == "FAILED":
+            print(f"[{a} × {s} × {m}] FAILED: {row['error']}")
+        elif row.get("status") == "skipped":
+            print(f"[{a} × {s} × {m}] skipped: {row['reason']}")
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rows[-1]) + "\n")
+
+    n_ok = sum(r.get("status") == "ok" for r in rows)
+    n_skip = sum(r.get("status") == "skipped" for r in rows)
+    n_fail = len(rows) - n_ok - n_skip
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED "
+          f"of {len(rows)} cells")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch × shape × mesh) cell we derive three per-chip time terms from the
+AOT-compiled module (no TPU needed — the brief's methodology):
+
+  compute    = HLO_FLOPs(per device)      / peak_FLOP/s
+  memory     = HLO_bytes(per device)      / HBM_bw
+  collective = collective_bytes(per dev.) / link_bw
+
+Sources: `compiled.cost_analysis()` (per-device flops & bytes after SPMD
+partitioning); collective bytes are NOT in cost_analysis — we parse the
+post-partitioning HLO (`compiled.as_text()`) and sum the output-shape bytes
+of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute instruction (fusion never hides collectives, so text
+parsing is exact at op granularity).
+
+Hardware constants (TPU v5e-class, per chip): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI. INT8 doubles MXU throughput (QuantGr's 2×
+claim maps to the same factor on the MXU datapath).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per-chip effective)
+DCN_BW = 6.25e9               # bytes/s per chip across pods (50 Gb/s class)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\/ ]+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind from post-SPMD HLO text.
+
+    `-start/-done` async pairs are counted once (the -done op has the same
+    shape tuple; we match only `-start` when present by skipping `-done`).
+    """
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: int
+    coll_breakdown: Dict[str, int]
+    peak_flops: float = PEAK_FLOPS_BF16
+
+    # analytic bookkeeping
+    model_flops: float = 0.0            # 6·N·D (train) / 2·N·D (inference)
+    n_devices: int = 256
+    argument_bytes: Optional[int] = None
+    temp_bytes: Optional[int] = None
+    output_bytes: Optional[int] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × devices): catches remat/redundancy."""
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound time — the score we hillclimb."""
+        t_useful = self.model_flops / (self.n_devices * self.peak_flops)
+        return t_useful / self.t_bound if self.t_bound else 0.0
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_total": self.flops_per_device * self.n_devices,
+            "useful_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_breakdown": self.coll_breakdown,
+            "arg_bytes_per_dev": self.argument_bytes,
+            "temp_bytes_per_dev": self.temp_bytes,
+        }
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N·D for training, 2·N·D per generated/processed token otherwise
+    (MoE: N_active). D = tokens processed by the lowered step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: ONE token per sequence, plus attention reads over the cache
+    tokens = shape.global_batch
+    attn_read = 0.0
+    if not cfg.attention_free:
+        n_attn = sum(1 for k in cfg.superblock if k.startswith("attn"))
+        n_attn *= cfg.num_superblocks
+        # 2 (QK^T) + 2 (PV) flops per cached key element per head dim
+        attn_read = (4.0 * shape.global_batch * shape.seq_len
+                     * cfg.num_heads * cfg.head_dim_ * n_attn)
+    return 2.0 * n * tokens + attn_read
+
+
+def extract_terms(compiled, *, arch: str, shape, mesh_name: str,
+                  n_devices: int, cfg=None) -> RooflineTerms:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    ma = None
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        pass
+    return RooflineTerms(
+        arch=arch, shape=shape.name, mesh=mesh_name,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=sum(coll.values()), coll_breakdown=coll,
+        model_flops=model_flops_estimate(cfg, shape) if cfg else 0.0,
+        n_devices=n_devices,
+        argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+        temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+        output_bytes=getattr(ma, "output_size_in_bytes", None),
+    )
+
+
+def fmt_seconds(t: float) -> str:
+    if t >= 1.0:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t * 1e3:.2f}ms"
+    return f"{t * 1e6:.1f}us"
+
+
+def render_table(rows: List[Dict[str, Any]]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':10s} {'t_comp':>9s} "
+           f"{'t_mem':>9s} {'t_coll':>9s} {'bound':>10s} {'useful':>7s} "
+           f"{'roofline':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:10s} "
+            f"{fmt_seconds(r['t_compute_s']):>9s} "
+            f"{fmt_seconds(r['t_memory_s']):>9s} "
+            f"{fmt_seconds(r['t_collective_s']):>9s} "
+            f"{r['bottleneck']:>10s} {r['useful_fraction']:>7.2%} "
+            f"{r['roofline_fraction']:>8.2%}")
+    return "\n".join(lines)

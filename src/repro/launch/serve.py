@@ -1,0 +1,45 @@
+"""Serving launcher: NodePad-bucketed batch inference.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+      --requests 16 --max-new 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--buckets", type=int, nargs="+", default=[32, 64])
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, reduced
+    from repro.runtime.server import ServeConfig, Server
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg)
+    sc = ServeConfig(buckets=tuple(args.buckets), max_len=args.max_len,
+                     batch_slots=args.slots)
+    server = Server(cfg, sc, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    for _ in range(args.requests):
+        n = int(rng.integers(4, args.buckets[-1]))
+        server.submit(rng.integers(0, cfg.vocab_size, size=n),
+                      max_new_tokens=args.max_new)
+    server.run()
+    print(json.dumps(server.summary(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,251 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+`input_specs(cfg, shape)` returns weak-type-correct, shardable specs for all
+model inputs — no device allocation ever happens for the FULL configs; only
+`.lower().compile()` consumes these (the shannon/kernels pattern).
+
+Cell semantics (per the assignment):
+  train_4k    — lower `train_step`  (loss + grads + AdamW update)
+  prefill_32k — lower `prefill_step` (forward + cache build; enc-dec archs
+                run the encoder at the assigned seq_len with a short decoder
+                prompt — the frontend stub feeds 32k frames)
+  decode_32k  — lower `serve_step`  (ONE new token against a seq_len cache)
+  long_500k   — `serve_step` at 524288; only sub-quadratic archs (ssm /
+                jamba hybrid) run it, pure full-attention archs are skipped
+                (recorded in DESIGN.md §Arch-applicability / EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import lm, transformer as tfm
+from repro.nn.config import ArchConfig, ShapeConfig, SHAPES
+from repro.optim.adamw import adamw_init
+
+
+WHISPER_DECODE_PROMPT = 256   # decoder prompt length when the encoder is the
+                              # sequence carrier (prefill cells of enc-dec)
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def runnable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Is this (arch, shape) cell runnable? (per the assignment rules)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 512k decode needs "
+                       "sub-quadratic attention (skip per assignment)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Abstract trees (params / optimizer / caches) via eval_shape
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _abstract_params_cached(cfg: ArchConfig, dtype_override: Optional[str]):
+    tree = jax.eval_shape(lambda: lm.lm_init(jax.random.PRNGKey(0), cfg))
+    if dtype_override is None:
+        return tree
+    dt = jnp.dtype(dtype_override)
+
+    def cast(leaf):
+        if isinstance(leaf, jax.ShapeDtypeStruct) and \
+                jnp.issubdtype(leaf.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(leaf.shape, dt)
+        return leaf
+    return jax.tree_util.tree_map(cast, tree)
+
+
+def abstract_params(cfg: ArchConfig, *, serve: bool = False):
+    """Training: fp32 master weights. Serving: bf16 weights (the standard
+    inference deployment — fp32 masters are a training artifact; llama4's
+    107 B would otherwise overflow 16 GB/chip at decode)."""
+    return _abstract_params_cached(cfg, "bfloat16" if serve else None)
+
+
+def abstract_opt(cfg: ArchConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(adamw_init, params)
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: tfm.init_caches(cfg, batch, max_len))
+
+
+def abstract_enc_kv(cfg: ArchConfig, batch: int, frames: int):
+    nsb = cfg.num_superblocks
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim_
+    return (sds((nsb, batch, frames, kvh, hd), cfg.dtype),
+            sds((nsb, batch, frames, kvh, hd), cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Per-cell input specs
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+        "mask": sds((b, s), jnp.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        specs["patches"] = sds((b, cfg.num_patches, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "audio_stub":
+        specs["frames"] = sds((b, cfg.encoder.frames, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        # the 32k sequence rides the encoder (stub frames); short dec prompt
+        return {"tokens": sds((b, WHISPER_DECODE_PROMPT), jnp.int32),
+                "frames": sds((b, s, cfg.d_model), cfg.dtype)}
+    specs = {"tokens": sds((b, s), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        specs["patches"] = sds((b, cfg.num_patches, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "token": sds((b,), jnp.int32),
+        "pos": sds((), jnp.int32),
+        "caches": abstract_caches(cfg, b, s),
+    }
+    if cfg.is_encdec:
+        specs["enc_kv"] = abstract_enc_kv(cfg, b, cfg.encoder.frames)
+    return specs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Step functions to lower (one per cell kind)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, *, microbatches: int = 8,
+                    steps: int = 1000):
+    """Raw (unjitted) train step — jitted at the call site with explicit
+    shardings (dryrun) or plainly (examples)."""
+    from repro.optim.adamw import (adamw_update, clip_by_global_norm,
+                                   linear_warmup_cosine)
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(params, cfg, batch)
+
+    def step_fn(params, opt, batch, step):
+        n_micro = microbatches
+
+        def micro(carry, mb):
+            gacc, lacc = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            gacc = jax.tree_util.tree_map(jnp.add, gacc, grads)
+            return (gacc, lacc + loss), None
+
+        if n_micro > 1:
+            from repro.dist.sharding import constrain_scan_slices
+
+            def reshape(x):
+                b = x.shape[0]
+                y = x.reshape((n_micro, b // n_micro) + x.shape[1:])
+                return constrain_scan_slices(y)   # keep batch dim sharded
+            mbs = jax.tree_util.tree_map(reshape, batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.zeros(())), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = linear_warmup_cosine(step, base_lr=3e-4, warmup_steps=100,
+                                  total_steps=steps)
+        new_params, new_opt = adamw_update(params, grads, opt, lr=lr,
+                                           weight_decay=0.1)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return step_fn
+
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeConfig):
+    max_len = shape.seq_len if not cfg.is_encdec else (
+        WHISPER_DECODE_PROMPT + 256)
+    if cfg.frontend == "vision_stub":
+        max_len += cfg.num_patches      # NodePad: prefix positions included
+
+    def prefill_step(params, batch):
+        logits, state = lm.lm_prefill(
+            params, cfg, batch["tokens"], max_len=max_len,
+            prefix_embeds=batch.get("patches"),
+            enc_embeds=batch.get("frames"))
+        return logits, state.caches
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, shape: ShapeConfig):
+    """Decode step with caches as a SEPARATE argument so the launcher can
+    donate them (jit donate_argnums): the cache update aliases in place and
+    per-device HBM holds ONE cache copy, not input+output."""
+    def serve_step(params, caches, token, pos, enc_kv=None):
+        state = lm.ServeState(caches=caches, pos=pos, enc_kv=enc_kv)
+        logits, state = lm.lm_decode_step(params, cfg, token, state)
+        return logits, state.caches, state.pos
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Dry-run microbatch policy: keep per-device live activations << HBM.
+# ---------------------------------------------------------------------------
+
+
+def train_microbatches(cfg: ArchConfig, shape: ShapeConfig, n_data: int) -> int:
+    """Largest power-of-two microbatch count that keeps the per-device
+    microbatch >= 1 sequence; 8 is the default derived in DESIGN.md §5
+    (27B × 4k × 16/dev: boundary activations 13.9 GB -> 1.7 GB)."""
+    per_dev = max(shape.global_batch // n_data, 1)
+    return min(8, per_dev)
+
+
+def cost_config(cfg: ArchConfig, k: int) -> ArchConfig:
+    """Cost-exact variant with k superblocks, every loop unrolled.
+
+    XLA's HLO cost analysis counts while-loop bodies ONCE (not × trip
+    count), so scanned programs under-report FLOPs/bytes/collectives. The
+    dry-run therefore lowers TWO unrolled variants (k=1, 2): per-metric
+    M_k = F + k·B  =>  B = M2 − M1, F = 2·M1 − M2, and the true cost of the
+    deployed stack is F + num_superblocks·B. Chunk sizes are enlarged only
+    where the metric is invariant to them (flash q/kv blocks, loss chunk).
+    """
+    sb = len(cfg.superblock)
+    changes: Dict[str, Any] = dict(
+        num_layers=k * sb, unroll_scans=True, loss_chunk=4096)
+    if not cfg.attn_block_skip:
+        # enlarging flash blocks is metric-invariant ONLY without block-skip
+        # (the skipped fraction depends on the block grid)
+        changes.update(q_chunk=8192, kv_chunk=8192)
+    if cfg.encoder is not None:
+        changes["encoder"] = dataclasses.replace(cfg.encoder, num_layers=k)
+    return dataclasses.replace(cfg, **changes)

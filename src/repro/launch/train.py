@@ -1,0 +1,53 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 200 --batch 8 --seq 256 --reduced --ckpt-dir /tmp/run1
+
+`--reduced` trains the family-faithful shrink (CPU-runnable); without it the
+full config is instantiated (requires real accelerators). On a multi-host
+pod this script is launched once per host (jax.distributed); the data
+pipeline shards itself by (host_id, num_hosts).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="layer override for --reduced")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, reduced
+    from repro.runtime.trainer import TrainConfig, Trainer
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg, layers=args.layers)
+    tc = TrainConfig(steps=args.steps, seq_len=args.seq,
+                     global_batch=args.batch, microbatches=args.microbatches,
+                     lr=args.lr, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=args.ckpt_every, seed=args.seed)
+    print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model} "
+          f"params={cfg.param_count()/1e6:.1f}M devices={len(jax.devices())}")
+    trainer = Trainer(cfg, tc)
+    trainer.run()
+    print(json.dumps(trainer.summary(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

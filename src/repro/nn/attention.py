@@ -1,0 +1,316 @@
+"""GQA attention for the LM substrate.
+
+Two execution paths, mirroring the kernel routing policy:
+
+  * `chunked_attention` — pure-JAX online-softmax over KV blocks (lax.map
+    over query blocks, lax.scan over KV blocks). O(S * chunk) memory, never
+    materializes (Sq, Skv). This is what the multi-pod dry-run compiles
+    (works on every backend) and the oracle the Pallas flash kernel is tested
+    against. Masks (causal / sliding window) are *computed from positions*
+    inside each block — the GrAd discipline: no precomputed O(S^2) operand.
+  * `repro.kernels.ops.flash_attention` — the Pallas TPU kernel, selected on
+    TPU backends for the same math.
+
+Decode (Sq == 1) uses a direct einsum over the cache: logits are (B, H, Skv),
+already linear in S.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import Param, dense_param, ones_param
+from .config import ArchConfig
+
+NEG_INF = -1e9
+
+
+class AttnParams(NamedTuple):
+    wq: Param        # (d, H, hd)
+    wk: Param        # (d, KV, hd)
+    wv: Param        # (d, KV, hd)
+    wo: Param        # (H, hd, d)
+    q_norm: Optional[Param] = None   # (hd,) qwen3 qk-norm
+    k_norm: Optional[Param] = None
+
+
+def attn_init(key, cfg: ArchConfig, *, cross: bool = False) -> AttnParams:
+    d, hh, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    return AttnParams(
+        wq=dense_param(ks[0], (d, hh, hd), ("embed", "heads", None)),
+        wk=dense_param(ks[1], (d, kv, hd), ("embed", "kv", None)),
+        wv=dense_param(ks[2], (d, kv, hd), ("embed", "kv", None)),
+        wo=dense_param(ks[3], (hh, hd, d), ("heads", None, "embed")),
+        q_norm=ones_param((hd,), (None,)) if cfg.qk_norm else None,
+        k_norm=ones_param((hd,), (None,)) if cfg.qk_norm else None,
+    )
+
+
+def _block_mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=jnp.bool_)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, window: Optional[int] = None,
+                      attn_softcap: Optional[float] = None,
+                      scale: Optional[float] = None, q_offset: int = 0,
+                      q_chunk: int = 2048, kv_chunk: int = 2048,
+                      kv_len: Optional[jnp.ndarray] = None,
+                      unroll: bool = False,
+                      block_skip: bool = False,
+                      logits_bf16: bool = False,
+                      flash_stub: bool = False) -> jnp.ndarray:
+    """Online-softmax attention. q: (B,Sq,H,D), k/v: (B,Skv,KV,D).
+
+    `kv_len`: optional scalar — keys at positions >= kv_len are masked
+    (decode with a partially-filled NodePad'ded cache).
+    """
+    b, sq, hh, d = q.shape
+    _, skv, kvh, _ = k.shape
+    group = hh // kvh
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(q_chunk, sq)
+    bk = min(kv_chunk, skv)
+    # NodePad-pad ragged sequences to chunk multiples (vlm: patches+tokens).
+    # Padded queries are discarded below; padded keys are masked via kv_len.
+    qpad, kpad = (-sq) % bq, (-skv) % bk
+    sq_orig = sq
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        sq += qpad
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        kv_len = jnp.asarray(skv) if kv_len is None else jnp.minimum(kv_len, skv)
+        skv += kpad
+    nq, nk = sq // bq, skv // bk
+
+    # (B, Sq, H, D) -> (nq, B, bq, H, D): chunked along sequence
+    qc = jnp.moveaxis(q.reshape(b, nq, bq, hh, d), 1, 0) * scale
+    kc = jnp.moveaxis(k.reshape(b, nk, bk, kvh, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, bk, kvh, d), 1, 0)
+
+    score_dt = jnp.bfloat16 if logits_bf16 else jnp.float32
+
+    if flash_stub:
+        # bytes-equivalent stand-in for the Pallas flash kernel: reads Q, K,
+        # V once, writes O once — no score-sized HBM buffer exists (VMEM
+        # residency). Output values are NOT attention (measurement only).
+        kmix = jnp.mean(k, axis=(1, 2)) + jnp.mean(v, axis=(1, 2))  # (B, D)
+        out = q * kmix[:, None, None, :].astype(q.dtype)
+        return out[:, :sq_orig]
+
+    def q_block(args):
+        iq, qb = args                                   # qb: (B, bq, H, D)
+        q_pos = q_offset + iq * bq + jnp.arange(bq)
+
+        def kv_step(carry, jk, kb, vb):
+            m_run, l_run, acc = carry
+            k_pos = jk * bk + jnp.arange(bk)
+            # logits: (B, KV, g, bq, bk) — grouped GQA einsum, no KV repeat.
+            # logits_bf16 (QuantGr-on-scores, §Perf): halves the dominant
+            # S^2 HBM term; softmax stats still accumulate in fp32.
+            qg = qb.reshape(b, bq, kvh, group, d)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb,
+                           preferred_element_type=score_dt)
+            s = common.softcap(s, attn_softcap)
+            mask = _block_mask(q_pos, k_pos, causal=causal, window=window)
+            if kv_len is not None:
+                mask &= (k_pos < kv_len)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1).astype(jnp.float32))
+            p = jnp.exp(s.astype(jnp.float32) - m_new[..., None]) \
+                if not logits_bf16 else \
+                jnp.exp((s - m_new[..., None].astype(score_dt)))
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + p.sum(axis=-1, dtype=jnp.float32)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc)
+
+        m0 = jnp.full((b, kvh, group, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, group, bq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, group, bq, d), jnp.float32)
+        carry0 = (m0, l0, a0)
+
+        if not block_skip:
+            (m_f, l_f, acc), _ = jax.lax.scan(
+                lambda c, xs: (kv_step(c, *xs), None), carry0,
+                (jnp.arange(nk), kc, vc), unroll=nk if unroll else 1)
+        else:
+            # static block-skip (§Perf): iq is a python int (block_skip
+            # forces the unrolled q loop below), so the not-fully-masked
+            # block range resolves at trace time — the skipped blocks are
+            # simply absent from the HLO (differentiable, exactly costed).
+            # Causal halves the S^2 work; sliding-window layers drop from
+            # S^2 to S*window (gemma2 local: 8x at 32k prefill).
+            iq_s = int(iq)
+            hi = min(nk, (q_offset + (iq_s + 1) * bq - 1) // bk + 1) \
+                if causal else nk
+            lo = max(0, (q_offset + iq_s * bq - window + 1) // bk) \
+                if window is not None else 0
+            carry = carry0
+            for j in range(lo, hi):
+                carry = kv_step(carry, jnp.asarray(j), kc[j], vc[j])
+            m_f, l_f, acc = carry
+
+        out = acc / jnp.maximum(l_f, 1e-12)[..., None]  # (B, KV, g, bq, D)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, bq, hh, d)
+        return out.astype(q.dtype)
+
+    if nq == 1:
+        out = q_block((0, qc[0]))[None]
+    elif unroll or block_skip:   # cost-exact mode / static block-skip
+        out = jnp.stack([q_block((i, qc[i])) for i in range(nq)])
+    else:
+        out = jax.lax.map(q_block, (jnp.arange(nq), qc))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, hh, d)
+    return out[:, :sq_orig]
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     *, window: Optional[int], attn_softcap: Optional[float],
+                     pos: jnp.ndarray, scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token attention over a NodePad'ded cache.
+
+    q: (B, 1, H, D); caches: (B, S, KV, D); pos: scalar current position, or
+    (B,) per-slot positions (continuous batching). Cache slots > pos are
+    masked additively (GrAx1: add NEG_INF, no Select on the data path).
+    """
+    b, _, hh, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    group = hh // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kvh, group, d) * scale
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    logits = common.softcap(logits, attn_softcap)
+    k_pos = jnp.arange(s)
+    posb = pos if pos.ndim == 1 else jnp.full((b,), pos)   # (B,)
+    valid = k_pos[None, :] <= posb[:, None]                # (B, S)
+    if window is not None:
+        valid &= k_pos[None, :] > posb[:, None] - window
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)  # GrAx1 additive
+    logits = logits + bias[:, None, None, :]
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", attn.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hh, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + rope + norm + attention + out-proj)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p: AttnParams, cfg: ArchConfig, x: jnp.ndarray,
+                 kv_src: Optional[jnp.ndarray] = None):
+    dt = cfg.dtype
+    kv_in = x if kv_src is None else kv_src
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq.value.astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_in, p.wk.value.astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_in, p.wv.value.astype(dt))
+    if p.q_norm is not None:
+        q = common.rms_norm(q, p.q_norm.value)
+        k = common.rms_norm(k, p.k_norm.value)
+    return q, k, v
+
+
+def attn_forward(p: AttnParams, cfg: ArchConfig, x: jnp.ndarray, *,
+                 kind: str, positions: jnp.ndarray,
+                 cross_kv: Optional[tuple] = None) -> jnp.ndarray:
+    """Training/prefill attention. x: (B, S, d) in compute dtype."""
+    dt = cfg.dtype
+    if cross_kv is not None:
+        # Cross-attention (whisper decoder->encoder): no rope — relative
+        # position between text and audio frames is not meaningful.
+        k, v = cross_kv
+        q = jnp.einsum("bsd,dhk->bshk", x, p.wq.value.astype(dt))
+        if p.q_norm is not None:
+            q = common.rms_norm(q, p.q_norm.value)
+        out = chunked_attention(q, k, v, causal=False,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                unroll=cfg.unroll_scans,
+                                logits_bf16=cfg.logits_bf16)
+    else:
+        q, k, v = _project_qkv(p, cfg, x)
+        q = common.apply_rope(q, positions, theta=cfg.rope_theta,
+                              fraction=cfg.rope_fraction)
+        k = common.apply_rope(k, positions, theta=cfg.rope_theta,
+                              fraction=cfg.rope_fraction)
+        causal = kind != "attn_bidir"
+        window = cfg.local_window if kind == "attn_local" else None
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                attn_softcap=cfg.attn_softcap,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                unroll=cfg.unroll_scans,
+                                block_skip=cfg.attn_block_skip,
+                                logits_bf16=cfg.logits_bf16,
+                                flash_stub=cfg.attn_flash_stub)
+    return jnp.einsum("bshk,hkd->bsd", out, p.wo.value.astype(dt))
+
+
+def attn_prefill_kv(p: AttnParams, cfg: ArchConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray):
+    """Compute rope'd K/V for cache initialization (prefill)."""
+    dt = cfg.dtype
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk.value.astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv.value.astype(dt))
+    if p.k_norm is not None:
+        k = common.rms_norm(k, p.k_norm.value)
+    k = common.apply_rope(k, positions, theta=cfg.rope_theta,
+                          fraction=cfg.rope_fraction)
+    return k, v
+
+
+def attn_decode(p: AttnParams, cfg: ArchConfig, x: jnp.ndarray,
+                k_cache: jnp.ndarray, v_cache: jnp.ndarray, pos: jnp.ndarray,
+                *, kind: str, cross: bool = False):
+    """One-token decode. x: (B, 1, d). Returns (out, new_k, new_v).
+
+    The cache is a NodePad bucket: statically (B, S_max, KV, D); `pos` is the
+    write cursor. GrAd discipline — same compiled blob for every position.
+    """
+    dt = cfg.dtype
+    if cross:
+        q = jnp.einsum("bsd,dhk->bshk", x, p.wq.value.astype(dt))
+        if p.q_norm is not None:
+            q = common.rms_norm(q, p.q_norm.value)
+        out = decode_attention(q, k_cache, v_cache, window=None,
+                               attn_softcap=None,
+                               pos=jnp.asarray(k_cache.shape[1] - 1))
+        new_k, new_v = k_cache, v_cache
+    else:
+        q, k, v = _project_qkv(p, cfg, x)
+        posv = pos[None] if pos.ndim == 0 else pos[:, None]  # (1,) or (B,1)
+        q = common.apply_rope(q, posv, theta=cfg.rope_theta,
+                              fraction=cfg.rope_fraction)
+        k = common.apply_rope(k, posv, theta=cfg.rope_theta,
+                              fraction=cfg.rope_fraction)
+        if pos.ndim == 1:
+            # per-slot write cursors (continuous batching): vmapped update
+            upd = jax.vmap(
+                lambda c, kk, pp: jax.lax.dynamic_update_slice_in_dim(
+                    c, kk, pp, axis=0))
+            new_k = upd(k_cache, k.astype(k_cache.dtype), pos)
+            new_v = upd(v_cache, v.astype(v_cache.dtype), pos)
+        else:
+            new_k = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), pos, axis=1)
+            new_v = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), pos, axis=1)
+        window = cfg.local_window if kind == "attn_local" else None
+        out = decode_attention(q, new_k, new_v, window=window,
+                               attn_softcap=cfg.attn_softcap, pos=pos)
+    return jnp.einsum("bshk,hkd->bsd", out, p.wo.value.astype(dt)), new_k, new_v

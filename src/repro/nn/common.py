@@ -1,0 +1,158 @@
+"""Shared building blocks for the LM substrate.
+
+Parameters carry *logical axis names* (a hand-rolled version of flax's
+logical-axis machinery): every leaf is created as a `Param(value, axes)` and
+`split_params` separates the value tree from the axes tree. The distribution
+layer (`repro.dist.sharding`) maps logical axes -> mesh axes, checking
+divisibility, so the same model definition runs on 1 CPU device, a 16x16 pod,
+or the 2x16x16 multi-pod mesh without edits — the NodePad philosophy (one
+artifact, many deployments) applied to distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Param with logical axes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any                 # jnp.ndarray (or ShapeDtypeStruct under eval_shape)
+    axes: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), tuple(p.axes)),
+    lambda axes, children: Param(children[0], axes))
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Param tree -> (values tree, axes tree), same structure."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=_is_param)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=_is_param)
+    return values, axes
+
+
+def dense_param(key, shape, axes, *, scale: Optional[float] = None,
+                dtype=jnp.float32) -> Param:
+    """Truncated-normal fan-in init (the standard LM init)."""
+    fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    v = jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * scale
+    return Param(v, axes)
+
+
+def zeros_param(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones_param(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+def stack_params(trees):
+    """Stack per-layer Param trees along a leading 'layers' axis (for scan)."""
+    def stack(*ps):
+        return Param(jnp.stack([p.value for p in ps]),
+                     ("layers",) + ps[0].axes)
+    return jax.tree_util.tree_map(stack, *trees, is_leaf=_is_param)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations (computed in fp32, cast back — TPU numerics practice)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-6,
+             zero_centered: bool = False) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    g = scale.astype(jnp.float32)
+    y = y * (1.0 + g) if zero_centered else y * g
+    return y.astype(dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               *, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard / partial "2d"-style)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, *, theta: float, fraction: float = 1.0):
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (S,) or (B, S) absolute positions.
+
+    Rotates the first `fraction * D` dims (chatglm's partial/'2d' RoPE is
+    fraction=0.5; standard llama-family is 1.0), NeoX half-split layout.
+    """
+    b, s, h, d = x.shape
+    inv, rot = rope_frequencies(d, theta=theta, fraction=fraction)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, :, None].astype(jnp.float32) * inv[None, None, :]  # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)   # (B,S,1,rot/2)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def take_embedding(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Token embedding lookup.
+
+    NOTE (EffOp applicability): the paper rewrites gathers as one-hot matmuls
+    when the gather index set is small and reused (graph neighborhoods). A
+    vocab-size one-hot here would cost B*S*V*d FLOPs — catastrophically more
+    than the gather; XLA lowers this take to an efficient dynamic-gather on
+    TPU. Documented in DESIGN.md §Arch-applicability as a case where the
+    technique does NOT transfer.
+    """
+    return jnp.take(table, tokens, axis=0)

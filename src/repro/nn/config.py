@@ -1,0 +1,232 @@
+"""Architecture + shape configuration for the LM substrate.
+
+One `ArchConfig` covers all 10 assigned families (dense / ssm / moe / hybrid
+/ vlm / audio). Layer heterogeneity (gemma2 local-global alternation, jamba's
+1:7 mamba:attention interleave with MoE every other layer) is expressed as a
+*superblock*: the smallest repeating pattern of layers. The model scans over
+superblocks, so the HLO is O(superblock), not O(num_layers) — this is what
+makes 46-layer x 512-device dry-run compiles tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    every_k_layers: int = 1          # MoE replaces the MLP every k-th layer
+    shared_expert_ff: int = 0        # llama4-style always-on shared expert
+    capacity_factor: float = 1.25
+    group_size: int = 1024           # EffOp dense-dispatch token group
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    chunk: int = 256
+    conv_kernel: int = 4
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style encoder (frontend is a stub: precomputed embeddings)."""
+    num_layers: int
+    frames: int                      # encoder sequence length at decode time
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | ssm | moe | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // num_heads
+    # --- attention flavor ---
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0       # chatglm partial ('2d') rope = 0.5
+    qk_norm: bool = False            # qwen3
+    attn_softcap: Optional[float] = None    # gemma2: 50.0
+    final_softcap: Optional[float] = None   # gemma2: 30.0
+    local_window: Optional[int] = None      # gemma2 sliding window
+    layer_pattern: str = "global"    # global | local_global | jamba | ssm
+    attn_logits_f32: bool = True
+    # --- mixtures / ssm / enc-dec / frontends ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    frontend: Optional[str] = None   # vision_stub | audio_stub
+    num_patches: int = 1024          # vlm: patch-embedding positions
+    # --- misc ---
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    zero_centered_norm: bool = False  # gemma2 (1 + g) rmsnorm
+    post_norms: bool = False         # gemma2 sandwich norms
+    scale_embeddings: bool = False   # gemma2: x *= sqrt(d_model)
+    act: str = "silu"
+    gated_mlp: bool = True
+    tie_embeddings: bool = True
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    loss_chunk: int = 512            # vocab-loss sequence chunking
+    q_chunk: int = 2048              # pure-JAX flash attention block sizes
+    kv_chunk: int = 2048
+    # Cost-exact lowering mode (launch/dryrun two-point measurement): unroll
+    # every scan/map so XLA's HLO cost analysis (which counts while bodies
+    # ONCE, not × trip count) reports exact FLOPs/bytes/collective totals.
+    unroll_scans: bool = False
+    # §Perf hillclimb knobs (baseline = paper-faithful = all off):
+    attn_block_skip: bool = False    # skip fully-masked causal/window blocks
+    logits_bf16: bool = False        # attention scores in bf16 (2x less HBM)
+    # Flash-kernel HBM model (dry-run MEASUREMENT aid only, never executed
+    # for real outputs): replaces attention score math with a bytes-
+    # equivalent Q/K/V->O stream, modelling the Pallas flash kernel whose
+    # score tiles live in VMEM. XLA-CPU HLO cannot express VMEM residency
+    # (it legalizes bf16 math via f32 materializations), so the kernel's
+    # memory term is measured through this stub; compute/collective terms
+    # are taken from the non-stub variant.
+    attn_flash_stub: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def superblock(self) -> Tuple[str, ...]:
+        """Per-layer kinds inside the smallest repeating block.
+
+        kinds: 'attn' (global), 'attn_local', 'ssm' — each is followed by its
+        MLP/MoE as dictated by `moe.every_k_layers` (position parity within
+        the superblock).
+        """
+        if self.layer_pattern == "global":
+            return ("attn",)
+        if self.layer_pattern == "local_global":
+            return ("attn_local", "attn")
+        if self.layer_pattern == "ssm":
+            return ("ssm",)
+        if self.layer_pattern == "jamba":
+            # Jamba block: 8 layers, attention at index 4 (1:7 ratio),
+            # MoE on odd layers (every_k_layers=2 handled by position).
+            return ("ssm", "ssm", "ssm", "ssm", "attn", "ssm", "ssm", "ssm")
+        raise ValueError(self.layer_pattern)
+
+    @property
+    def num_superblocks(self) -> int:
+        sb = len(self.superblock)
+        assert self.num_layers % sb == 0, (self.num_layers, sb)
+        return self.num_layers // sb
+
+    def layer_uses_moe(self, pos_in_superblock: int, kind: str) -> bool:
+        del kind  # MoE placement depends only on position (jamba: odd layers)
+        if self.moe is None:
+            return False
+        return pos_in_superblock % self.moe.every_k_layers == (
+            self.moe.every_k_layers - 1)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder is not None
+
+    @property
+    def attention_free(self) -> bool:
+        return self.layer_pattern == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (SSM / hybrid with O(1)-state majority)."""
+        return self.layer_pattern in ("ssm", "jamba")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline bookkeeping)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim_
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = v * d  # embed
+        if not self.tie_embeddings:
+            total += v * d
+        for i in range(self.num_layers):
+            kind = self.superblock[i % len(self.superblock)]
+            if kind.startswith("attn"):
+                total += d * n_q * hd + 2 * d * n_kv * hd + n_q * hd * d
+            else:  # ssm
+                s = self.ssm
+                d_in = s.expand * d
+                total += d * 2 * d_in                      # w_zx
+                total += d * 2 * s.n_groups * s.d_state    # w_bc
+                total += d * (d_in // s.headdim)           # w_dt
+                total += d_in * d                          # out_proj
+                total += s.conv_kernel * (d_in + 2 * s.n_groups * s.d_state)
+            if self.layer_uses_moe(i % len(self.superblock), kind):
+                m = self.moe
+                mult = 3 if self.gated_mlp else 2
+                total += m.num_experts * mult * d * m.d_ff_expert
+                total += d * m.num_experts  # router
+                if m.shared_expert_ff:
+                    total += mult * d * m.shared_expert_ff
+            elif ff > 0:  # mamba2 sets d_ff=0 (no MLP); jamba ssm layers keep theirs
+                mult = 3 if self.gated_mlp else 2
+                total += mult * d * ff
+        if self.encoder is not None:
+            # encoder layers: self-attn + mlp; decoder cross-attn extra
+            enc = self.encoder.num_layers * (
+                (2 * d * n_q * hd + 2 * d * n_kv * hd)
+                + (3 if self.gated_mlp else 2) * d * ff)
+            cross = self.num_layers * (d * n_q * hd + 2 * d * n_kv * hd
+                                       + n_q * hd * d)
+            total += enc + cross
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (6*N_active*D roofline convention)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        mult = 3 if self.gated_mlp else 2
+        total = self.param_count()
+        per_moe_layer = m.num_experts * mult * self.d_model * m.d_ff_expert
+        active_per_layer = m.top_k * mult * self.d_model * m.d_ff_expert
+        n_moe_layers = sum(
+            1 for i in range(self.num_layers)
+            if self.layer_uses_moe(i % len(self.superblock),
+                                   self.superblock[i % len(self.superblock)]))
+        return int(total - n_moe_layers * (per_moe_layer - active_per_layer))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell from the assignment."""
+    name: str                        # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,74 @@
+"""Encoder–decoder support (whisper-base backbone).
+
+The modality frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings (B, frames, d_model) — the conv1d×2 + sinusoid
+frontend is replaced by those embeddings directly. The encoder backbone is
+real: `encoder.num_layers` bidirectional attention layers with MLPs.
+
+Cross-attention K/V for the decoder are precomputed once from the encoder
+output (per decoder superblock, stacked along the scan axis) — during decode
+they are static operands, the enc-dec analogue of CacheG's "compute the
+shared operand once, reuse it across every layer/step".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tfm
+from .config import ArchConfig
+
+
+def encoder_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Derive the encoder stack's config from the decoder's."""
+    return dataclasses.replace(cfg, num_layers=cfg.encoder.num_layers,
+                               layer_pattern="global", moe=None, encoder=None)
+
+
+def encoder_init(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ecfg = encoder_cfg(cfg)
+    return {"stack": tfm.stack_init(key, ecfg),
+            "final_norm": tfm.norm_init(ecfg)}
+
+
+def encoder_forward(enc_params: Dict[str, Any], cfg: ArchConfig,
+                    frame_embeds: jnp.ndarray) -> jnp.ndarray:
+    """frame_embeds: (B, frames, d) stub output -> encoder hidden states."""
+    ecfg = encoder_cfg(cfg)
+    s = frame_embeds.shape[1]
+    positions = jnp.arange(s)
+
+    def block_fn(carry, blk_params):
+        h, aux = carry
+        for pos in range(len(ecfg.superblock)):
+            h, a = tfm._layer_forward(blk_params[pos], ecfg, h,
+                                      kind="attn_bidir", positions=positions)
+            aux = aux + a
+        return (h, aux), None
+
+    if ecfg.remat:
+        block_fn = jax.checkpoint(block_fn)
+    (h, _), _ = jax.lax.scan(block_fn, (frame_embeds,
+                                        jnp.zeros((), jnp.float32)),
+                             enc_params["stack"],
+                             unroll=ecfg.num_superblocks if ecfg.unroll_scans
+                             else 1)
+    return tfm.apply_norm(enc_params["final_norm"], ecfg, h)
+
+
+def cross_kv(stacked: List[Dict[str, Any]], cfg: ArchConfig,
+             enc_out: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute decoder cross-attention K/V, stacked over superblocks.
+
+    Returns (k, v): each (nsb, B, enc_len, KV, hd). The whisper decoder
+    superblock is ('attn',), so position 0 holds the cross params.
+    """
+    dt = cfg.dtype
+    wk = stacked[0]["cross"].wk.value.astype(dt)   # (nsb, d, KV, hd)
+    wv = stacked[0]["cross"].wv.value.astype(dt)
+    k = jnp.einsum("bsd,ldhk->lbshk", enc_out, wk)
+    v = jnp.einsum("bsd,ldhk->lbshk", enc_out, wv)
+    return k, v

@@ -1,0 +1,189 @@
+"""Top-level language model: embeddings → superblock stack → chunked loss.
+
+Covers every assigned family through config alone:
+  dense / moe / ssm / hybrid  — `stack_forward` handles layer heterogeneity;
+  vlm                         — optional `prefix_embeds` (stub patch
+                                embeddings) are prepended to token embeddings,
+                                loss is computed on token positions only;
+  audio (enc-dec)             — optional `enc_embeds` (stub frame embeddings)
+                                run the real encoder; decoder cross-attends.
+
+The vocab-dim loss never materializes (B, S, V) for large V: log-softmax
+cross-entropy runs over `cfg.loss_chunk`-sized sequence chunks under
+jax.checkpoint (GraphSplit thinking: the huge tensor is the 'transfer' we
+design away).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer as tfm
+from .common import Param, dense_param, take_embedding
+from .config import ArchConfig
+
+
+class LMParams(NamedTuple):
+    embed: Param                         # (V, d)
+    stack: List[Dict[str, Any]]
+    final_norm: Dict[str, Param]
+    unembed: Optional[Param] = None      # (d, V) when not tied
+    encoder: Optional[Dict[str, Any]] = None
+
+
+def lm_init(key, cfg: ArchConfig) -> LMParams:
+    ks = jax.random.split(key, 4)
+    embed = dense_param(ks[0], (cfg.vocab_size, cfg.d_model),
+                        ("vocab", "embed"), scale=1.0)
+    return LMParams(
+        embed=embed,
+        stack=tfm.stack_init(ks[1], cfg, cross=cfg.is_encdec),
+        final_norm=tfm.norm_init(cfg),
+        unembed=(None if cfg.tie_embeddings else
+                 dense_param(ks[2], (cfg.d_model, cfg.vocab_size),
+                             ("embed", "vocab"))),
+        encoder=encdec.encoder_init(ks[3], cfg) if cfg.is_encdec else None,
+    )
+
+
+def embed_tokens(p: LMParams, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = take_embedding(p.embed.value, tokens).astype(cfg.dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    return x
+
+
+def hidden_to_logits(p: LMParams, cfg: ArchConfig, h: jnp.ndarray) -> jnp.ndarray:
+    w = (p.embed.value.T if p.unembed is None else p.unembed.value).astype(cfg.dtype)
+    logits = jnp.einsum("...d,dv->...v", h, w, preferred_element_type=jnp.float32)
+    from .common import softcap
+    return softcap(logits, cfg.final_softcap)
+
+
+def _encode(p: LMParams, cfg: ArchConfig, enc_embeds: jnp.ndarray):
+    enc_out = encdec.encoder_forward(p.encoder, cfg, enc_embeds.astype(cfg.dtype))
+    return encdec.cross_kv(p.stack, cfg, enc_out)
+
+
+def lm_hidden(p: LMParams, cfg: ArchConfig, tokens: jnp.ndarray, *,
+              prefix_embeds: Optional[jnp.ndarray] = None,
+              enc_embeds: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Returns (hidden (B, P+S, d), moe_aux, prefix_len)."""
+    x = embed_tokens(p, cfg, tokens)
+    plen = 0
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype), x], axis=1)
+        plen = prefix_embeds.shape[1]
+    positions = jnp.arange(x.shape[1])
+    enc_kv = _encode(p, cfg, enc_embeds) if enc_embeds is not None else None
+    h, aux = tfm.stack_forward(p.stack, cfg, x, positions=positions,
+                               enc_kv_stacked=enc_kv)
+    h = tfm.apply_norm(p.final_norm, cfg, h)
+    return h, aux, plen
+
+
+def chunked_xent(p: LMParams, cfg: ArchConfig, h: jnp.ndarray,
+                 labels: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-token CE over seq chunks; never materializes (B, S, V)."""
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+
+    def chunk_loss(args):
+        hc, yc, mc = args
+        logits = hidden_to_logits(p, cfg, hc)           # (B, c, V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(yc, 0)[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return nll.sum(), mc.sum()
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+    hs = jnp.moveaxis(h.reshape(b, nc, c, d), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, nc, c).astype(jnp.float32), 1, 0)
+    if nc == 1:
+        tot, cnt = chunk_loss((hs[0], ys[0], ms[0]))
+    elif cfg.unroll_scans:   # cost-exact mode: no while loop
+        outs = [chunk_loss((hs[i], ys[i], ms[i])) for i in range(nc)]
+        tot = sum(o[0] for o in outs)
+        cnt = sum(o[1] for o in outs)
+    else:
+        tots, cnts = jax.lax.map(chunk_loss, (hs, ys, ms))
+        tot, cnt = tots.sum(), cnts.sum()
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(p: LMParams, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """batch: tokens/labels/mask (B, S) (+ patches / frames for vlm/audio)."""
+    h, aux, plen = lm_hidden(
+        p, cfg, batch["tokens"],
+        prefix_embeds=batch.get("patches"),
+        enc_embeds=batch.get("frames"))
+    h = h[:, plen:]                       # loss over token positions only
+    ce = chunked_xent(p, cfg, h, batch["labels"], batch["mask"])
+    return ce + aux, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode (NodePad'ded caches)
+# ---------------------------------------------------------------------------
+
+
+class ServeState(NamedTuple):
+    caches: List[Any]
+    pos: jnp.ndarray                      # scalar int32 — next write position
+    enc_kv: Optional[Tuple] = None        # whisper cross K/V
+
+
+def lm_prefill(p: LMParams, cfg: ArchConfig, tokens: jnp.ndarray, *,
+               max_len: int,
+               prefix_embeds: Optional[jnp.ndarray] = None,
+               enc_embeds: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, ServeState]:
+    """Run the prompt, build caches. Returns (last-token logits, state)."""
+    x = embed_tokens(p, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    enc_kv = _encode(p, cfg, enc_embeds) if enc_embeds is not None else None
+    h, caches = tfm.stack_prefill(p.stack, cfg, x, positions=positions,
+                                  max_len=max_len, enc_kv_stacked=enc_kv)
+    h = tfm.apply_norm(p.final_norm, cfg, h)
+    logits = hidden_to_logits(p, cfg, h[:, -1:])
+    return logits[:, 0], ServeState(caches=caches,
+                                    pos=jnp.asarray(x.shape[1], jnp.int32),
+                                    enc_kv=enc_kv)
+
+
+def lm_decode_step(p: LMParams, cfg: ArchConfig, token: jnp.ndarray,
+                   state: ServeState) -> Tuple[jnp.ndarray, ServeState]:
+    """token: (B,) int32. One step; cache write at state.pos (GrAd cursor)."""
+    x = embed_tokens(p, cfg, token[:, None])
+    h, new_caches = tfm.stack_decode(p.stack, cfg, x, state.caches, state.pos,
+                                     enc_kv_stacked=state.enc_kv)
+    h = tfm.apply_norm(p.final_norm, cfg, h)
+    logits = hidden_to_logits(p, cfg, h[:, 0:1])[:, 0]
+    return logits, ServeState(caches=new_caches, pos=state.pos + 1,
+                              enc_kv=state.enc_kv)
+
+
+def greedy_generate(p: LMParams, cfg: ArchConfig, prompt: jnp.ndarray, *,
+                    steps: int, max_len: int) -> jnp.ndarray:
+    """Reference sampler for the examples: prefill + `steps` greedy tokens."""
+    logits, state = lm_prefill(p, cfg, prompt, max_len=max_len)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def body(carry, _):
+        tok, state = carry
+        logits, state = lm_decode_step(p, cfg, tok, state)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, state), nxt
+
+    (_, _), toks = jax.lax.scan(body, (tok, state), None, length=steps)
+    return jnp.concatenate([tok[None], toks], axis=0).T  # (B, steps+1)

@@ -1,0 +1,38 @@
+"""Dense MLP blocks (gated SwiGLU/GeGLU or plain)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import Param, activation, dense_param
+from .config import ArchConfig
+
+
+class MLPParams(NamedTuple):
+    w_in: Param                 # (d, ff) — gate proj when gated
+    w_up: Optional[Param]       # (d, ff) — up proj (gated only)
+    w_out: Param                # (ff, d)
+
+
+def mlp_init(key, cfg: ArchConfig, *, d_ff: Optional[int] = None) -> MLPParams:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return MLPParams(
+        w_in=dense_param(k1, (d, ff), ("embed", "ff")),
+        w_up=dense_param(k2, (d, ff), ("embed", "ff")) if cfg.gated_mlp else None,
+        w_out=dense_param(k3, (ff, d), ("ff", "embed")),
+    )
+
+
+def mlp_forward(p: MLPParams, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    dt = cfg.dtype
+    act = activation(cfg.act)
+    h = jnp.einsum("bsd,df->bsf", x, p.w_in.value.astype(dt))
+    if p.w_up is not None:
+        h = act(h) * jnp.einsum("bsd,df->bsf", x, p.w_up.value.astype(dt))
+    else:
+        h = act(h)
+    return jnp.einsum("bsf,fd->bsd", h, p.w_out.value.astype(dt))

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts with EffOp dense one-hot dispatch + NodePad capacity.
+
+This is the strongest transfer of the paper's ideas to the LM families
+(DESIGN.md §4): token->expert routing is a gather/scatter problem — exactly
+the control-heavy op class GraNNite rewrites. We implement dispatch and
+combine as *dense masked matmuls*:
+
+  * EffOp:   dispatch = one_hot(position_in_expert) masked matmul; combine =
+             gate-weighted transpose of the same mask. No gather, no scatter,
+             no sort — MXU-only data movement.
+  * NodePad: every expert buffer is padded to a fixed capacity
+             C = ceil(G * top_k * capacity_factor / E) per token-group;
+             overflow tokens drop (standard capacity-factor semantics),
+             underflow slots are zero — "0 = no edge" reused verbatim.
+  * GrAd:    the dispatch mask is a runtime tensor derived from router
+             outputs — never baked into the compiled blob.
+
+Grouped dispatch bounds the one-hot cost: tokens are processed in groups of
+`group_size` G, so dispatch FLOPs are T*G*k*cf*d instead of T^2*k*cf*d.
+Experts are sharded over the "model" mesh axis (EP); each device builds its
+local experts' buffers from the all-gathered group — XLA SPMD turns the
+dispatch einsum into an all-to-all-like exchange.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Param, activation, dense_param
+from .config import ArchConfig, MoEConfig
+from .mlp import MLPParams, mlp_forward, mlp_init
+
+
+class MoEParams(NamedTuple):
+    w_router: Param              # (d, E)
+    w_in: Param                  # (E, d, ff)
+    w_up: Optional[Param]        # (E, d, ff)
+    w_out: Param                 # (E, ff, d)
+    shared: Optional[MLPParams]  # llama4 always-on shared expert
+
+
+def moe_init(key, cfg: ArchConfig) -> MoEParams:
+    m = cfg.moe
+    d, e, ff = cfg.d_model, m.num_experts, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    return MoEParams(
+        w_router=dense_param(ks[0], (d, e), ("embed", None)),
+        w_in=dense_param(ks[1], (e, d, ff), ("experts", "embed", "ff")),
+        w_up=(dense_param(ks[2], (e, d, ff), ("experts", "embed", "ff"))
+              if cfg.gated_mlp else None),
+        w_out=dense_param(ks[3], (e, ff, d), ("experts", "ff", "embed")),
+        shared=(mlp_init(ks[4], cfg, d_ff=m.shared_expert_ff)
+                if m.shared_expert_ff else None),
+    )
+
+
+def capacity(m: MoEConfig, group: int) -> int:
+    c = int(group * m.top_k * m.capacity_factor / m.num_experts)
+    return max(8, -(-c // 8) * 8)  # pad to sublane multiple
+
+
+def _route(m: MoEConfig, logits: jnp.ndarray):
+    """logits: (G, E) -> (gates (G,k), idx (G,k), probs (G,E))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(axis=-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def _dispatch_masks(m: MoEConfig, gates: jnp.ndarray, idx: jnp.ndarray,
+                    cap: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build (G, E, C) dispatch 0/1 and combine (gate-weighted) tensors.
+
+    Pure masked-dense arithmetic (EffOp): one_hot + cumsum position
+    assignment, capacity overflow drops via a comparison mask.
+    """
+    g, k = idx.shape
+    e = m.num_experts
+    sel = jax.nn.one_hot(idx, e, dtype=jnp.float32)          # (G, k, E)
+    # position of each (token, slot) within its expert queue: count earlier
+    # assignments. Priority: slot-major then token order (standard).
+    flat = sel.transpose(1, 0, 2).reshape(k * g, e)           # slot-major
+    pos_flat = jnp.cumsum(flat, axis=0) - flat                # (k*G, E)
+    pos = pos_flat.reshape(k, g, e).transpose(1, 0, 2)        # (G, k, E)
+    within = (pos < cap) * sel                                # keep under capacity
+    pos_cap = jnp.sum(pos * within, axis=-1)                  # (G, k)
+    slot_oh = jax.nn.one_hot(pos_cap, cap, dtype=jnp.float32)  # (G, k, C)
+    keep = jnp.sum(within, axis=-1)                           # (G, k) 0/1
+    dispatch = jnp.einsum("gke,gkc->gec", within, slot_oh)     # (G, E, C)
+    combine = jnp.einsum("gke,gkc,gk->gec", within, slot_oh,
+                         gates * keep)
+    return dispatch, combine
+
+
+def _aux_losses(m: MoEConfig, probs: jnp.ndarray, idx: jnp.ndarray,
+                logits: jnp.ndarray) -> jnp.ndarray:
+    """Load-balance + router-z losses (standard Switch/OLMoE auxiliaries)."""
+    e = m.num_experts
+    density = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32),
+                       axis=(0, 1))                           # fraction routed
+    density_probs = jnp.mean(probs, axis=0)                   # router mass
+    lb = e * jnp.sum(density * density_probs)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32),
+                                             axis=-1)))
+    return m.router_aux_weight * lb + m.router_z_weight * z
+
+
+def moe_forward(p: MoEParams, cfg: ArchConfig, x: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss). Grouped EffOp dispatch."""
+    m = cfg.moe
+    dt = cfg.dtype
+    act = activation(cfg.act)
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+    g = min(m.group_size, t)
+    assert t % g == 0, (t, g)
+    ng = t // g
+    cap = capacity(m, g)
+    xg = tokens.reshape(ng, g, d)
+    # under the distribution context: keep the token dim of each group
+    # sharded over the data axes (see dist.sharding.constrain_scan_slices)
+    from repro.dist.sharding import constrain_scan_slices
+    xg = constrain_scan_slices(xg)
+
+    def group_fn(xt):
+        logits = jnp.einsum("gd,de->ge", xt, p.w_router.value.astype(dt))
+        gates, idx, probs = _route(m, logits)
+        dispatch, combine = _dispatch_masks(m, gates, idx, cap)
+        # EffOp dispatch: (G,E,C)^T @ (G,d) -> (E,C,d) on the MXU
+        buf = jnp.einsum("gec,gd->ecd", dispatch.astype(dt), xt)
+        h = jnp.einsum("ecd,edf->ecf", buf, p.w_in.value.astype(dt))
+        if p.w_up is not None:
+            h = act(h) * jnp.einsum("ecd,edf->ecf", buf, p.w_up.value.astype(dt))
+        else:
+            h = act(h)
+        out = jnp.einsum("ecf,efd->ecd", h, p.w_out.value.astype(dt))
+        # combine: gate-weighted un-dispatch, same mask transposed
+        y = jnp.einsum("gec,ecd->gd", combine.astype(dt), out)
+        aux = _aux_losses(m, probs, idx, logits)
+        return y, aux
+
+    if ng == 1:
+        y, aux = group_fn(xg[0])
+        y = y[None]
+    else:
+        # vmap (NOT lax.map): groups are independent — parallel hardware
+        # should process them concurrently, and an unrolled/vmapped form is
+        # exactly costed by HLO cost analysis (a scanned form is not).
+        y, aux = jax.vmap(group_fn)(xg)
+    out = y.reshape(b, s, d)
+    if p.shared is not None:
+        out = out + mlp_forward(p.shared, cfg, x)
+    return out, jnp.mean(aux)

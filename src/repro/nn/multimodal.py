@@ -1,0 +1,39 @@
+"""Modality frontend STUBS (per the assignment brief).
+
+phi-3-vision and whisper-base specify the transformer BACKBONE only; the
+CLIP / conv-mel frontends are stubs whose `input_specs()` provide
+*precomputed* patch / frame embeddings. These helpers generate deterministic
+synthetic embeddings with the right shapes & dtypes for smoke tests, and the
+ShapeDtypeStructs for the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+
+def vision_patch_embeddings(cfg: ArchConfig, batch: int, *,
+                            seed: int = 0) -> jnp.ndarray:
+    """Stub CLIP output: (B, num_patches, d_model), unit-scale."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (batch, cfg.num_patches, cfg.d_model),
+                          jnp.float32)
+    return (x / jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32))).astype(cfg.dtype)
+
+
+def audio_frame_embeddings(cfg: ArchConfig, batch: int, frames: int, *,
+                           seed: int = 0) -> jnp.ndarray:
+    """Stub conv-frontend output: (B, frames, d_model)."""
+    key = jax.random.PRNGKey(seed + 1)
+    x = jax.random.normal(key, (batch, frames, cfg.d_model), jnp.float32)
+    return (x / jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32))).astype(cfg.dtype)
+
+
+def vision_spec(cfg: ArchConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, cfg.num_patches, cfg.d_model), cfg.dtype)
+
+
+def audio_spec(cfg: ArchConfig, batch: int, frames: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, frames, cfg.d_model), cfg.dtype)

@@ -1,0 +1,321 @@
+"""Mamba2 SSD (state-space duality) layer — chunked dense-matmul scan.
+
+The SSD algorithm is itself a GraNNite-spirit rewrite (DESIGN.md §4): the
+recurrence  s_t = a_t s_{t-1} + b_t x_t  is control-heavy/sequential (the
+NPU-DSP analogue); SSD re-expresses length-L chunks as dense masked matmuls
+(the attention-like  C (L ∘ decay) B^T  form) that run on the MXU, with only
+an O(S/chunk) scan carrying the inter-chunk state. We implement exactly that
+structure:
+
+  * intra-chunk: (l, l) decay-masked C·B^T matmul — MXU work, chunk=256
+    keeps the (l, l) tile VMEM-resident;
+  * inter-chunk: lax.scan over chunk states (b, h, n, p) — the only
+    sequential dependency, S/chunk steps;
+  * decode: O(1) single-token state update (einsum, no scan).
+
+Shapes follow the Mamba2 paper: d_in = expand * d_model, heads = d_in /
+headdim, groups share B/C across heads (n_groups).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Param, dense_param, ones_param, zeros_param
+from .config import ArchConfig
+
+
+class SSMParams(NamedTuple):
+    w_zx: Param        # (d, 2*d_in) — z (gate) and x (ssm input) projections
+    w_bc: Param        # (d, 2*g*n)  — B and C projections
+    w_dt: Param        # (d, H)      — per-head timestep projection
+    conv_w: Param      # (k, d_in + 2*g*n) depthwise causal conv
+    conv_b: Param      # (d_in + 2*g*n,)
+    a_log: Param       # (H,)  A = -exp(a_log)
+    d_skip: Param      # (H,)  skip connection ("D" in mamba)
+    dt_bias: Param     # (H,)
+    norm: Param        # (d_in,) gated RMSNorm scale
+    w_out: Param       # (d_in, d)
+
+
+class SSMCache(NamedTuple):
+    """Decode-time state: NodePad'ded static shapes, GrAd-updated in place."""
+    conv: jnp.ndarray   # (B, k-1, d_in + 2*g*n) last conv inputs
+    state: jnp.ndarray  # (B, H, n, p) SSD recurrent state (fp32)
+
+
+def ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.headdim
+    return d_in, n_heads, s.n_groups, s.d_state
+
+
+def ssm_init(key, cfg: ArchConfig) -> SSMParams:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, n_heads, g, n = ssm_dims(cfg)
+    conv_ch = d_in + 2 * g * n
+    ks = jax.random.split(key, 5)
+    # dt bias: init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[3], (n_heads,))
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return SSMParams(
+        w_zx=dense_param(ks[0], (d, 2 * d_in), ("embed", "ssm_in")),
+        w_bc=dense_param(ks[1], (d, 2 * g * n), ("embed", None)),
+        w_dt=dense_param(ks[2], (d, n_heads), ("embed", "ssm_heads")),
+        conv_w=dense_param(ks[4], (s.conv_kernel, conv_ch), (None, None),
+                           scale=1.0 / s.conv_kernel),
+        conv_b=zeros_param((conv_ch,), (None,)),
+        a_log=Param(jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+                    ("ssm_heads",)),
+        d_skip=ones_param((n_heads,), ("ssm_heads",)),
+        dt_bias=Param(dt_bias, ("ssm_heads",)),
+        norm=ones_param((d_in,), ("ssm_in",)),
+        w_out=dense_param(ks[4], (d_in, d), ("ssm_in", "embed")),
+    )
+
+
+def _gated_rms_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                    eps: float = 1e-6) -> jnp.ndarray:
+    """Mamba2's RMSNormGated: norm(y * silu(z)) * scale, fp32 internals."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d. x: (B, S, C), w: (k, C). O(k) shifted adds —
+    dense elementwise work (no conv HLO needed; k=4)."""
+    k = w.shape[0]
+    pads = x if init is None else jnp.concatenate([init, x], axis=1)
+    if init is None:
+        pads = jnp.pad(pads, ((0, 0), (k - 1, 0), (0, 0)))
+    s = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # k=4: unrolled shifted adds fuse into one kernel
+        out = out + pads[:, i:i + s, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum_decay(da_cum: jnp.ndarray) -> jnp.ndarray:
+    """L[i, j] = exp(cum_i - cum_j) for j <= i else 0. da_cum: (..., l)."""
+    diff = da_cum[..., :, None] - da_cum[..., None, :]
+    mask = jnp.tril(jnp.ones(diff.shape[-2:], dtype=bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_scan(xh: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray, bmat: jnp.ndarray,
+             cmat: jnp.ndarray, *, chunk: int,
+             init_state: Optional[jnp.ndarray] = None,
+             unroll: bool = False
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. xh: (B,S,H,P), dt: (B,S,H) post-softplus, a: (H,) negative,
+    bmat/cmat: (B,S,G,N). Returns (y: (B,S,H,P), final_state: (B,H,N,P)).
+    """
+    b, s, h, p = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hg = h // g
+    l = min(chunk, s)
+    s_orig = s
+    pad = (-s) % l
+    if pad:
+        # NodePad: dt=0 on padded steps => decay=1 and zero state update, so
+        # padding is semantically inert for the recurrence (outputs sliced).
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s += pad
+    nc = s // l
+
+    # chunk: (B, nc, l, ...)
+    xc = xh.reshape(b, nc, l, h, p)
+    dtc = dt.reshape(b, nc, l, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, l, g, n)
+    cc = cmat.reshape(b, nc, l, g, n)
+
+    da = dtc * a.astype(jnp.float32)                     # (B,nc,l,H)
+    da_cum = jnp.cumsum(da, axis=2)                      # (B,nc,l,H)
+    da_total = da_cum[:, :, -1]                          # (B,nc,H)
+
+    # ---- intra-chunk (dense masked matmul — the MXU form) -----------------
+    # scores[b,c,h,i,j] = C_i·B_j * L[i,j] ; y_diag = scores @ (dt*x)
+    cb = jnp.einsum("bclgn,bcsgn->bcgls", cc, bc,
+                    preferred_element_type=jnp.float32)   # (B,nc,G,l,l)
+    lmat = _segsum_decay(jnp.moveaxis(da_cum, -1, -2))    # (B,nc,H,l,l)
+    lmat = lmat.reshape(b, nc, g, hg, l, l)
+    scores = cb[:, :, :, None] * lmat                     # (B,nc,G,hg,l,l)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]         # (B,nc,l,H,P)
+    xdt_g = xdt.reshape(b, nc, l, g, hg, p)
+    y_diag = jnp.einsum("bcghls,bcsghp->bclghp", scores, jnp.moveaxis(
+        xdt_g, 3, 3), preferred_element_type=jnp.float32)
+
+    # ---- chunk states ------------------------------------------------------
+    # S_c = sum_j exp(da_total - da_cum_j) * B_j ⊗ (dt_j x_j)   (B,nc,H,N,P)
+    decay_to_end = jnp.exp(da_total[:, :, None] - da_cum)  # (B,nc,l,H)
+    bw = bc[:, :, :, :, None, :] * decay_to_end.reshape(b, nc, l, g, hg)[..., None]
+    states = jnp.einsum("bclghn,bclghp->bcghnp",
+                        bw, xdt_g, preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk recurrence (the only scan) ---------------------------
+    s0 = (jnp.zeros((b, g, hg, n, p), jnp.float32) if init_state is None
+          else init_state.reshape(b, g, hg, n, p).astype(jnp.float32))
+    chunk_decay = jnp.exp(da_total).reshape(b, nc, g, hg)  # (B,nc,G,hg)
+
+    def step(carry, inp):
+        st, dec = inp                                      # (B,G,hg,N,P), (B,G,hg)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=nc if unroll else 1)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,nc,G,hg,N,P)
+
+    # ---- inter-chunk output: C_i · S_prev * exp(da_cum_i) ------------------
+    cdec = cc[:, :, :, :, None, :] * jnp.exp(da_cum).reshape(
+        b, nc, l, g, hg)[..., None]                        # (B,nc,l,G,hg,N)
+    y_off = jnp.einsum("bclghn,bcghnp->bclghp", cdec, prev_states,
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(xh.dtype), final.reshape(b, h, n, p)
+
+
+def ssm_forward(p: SSMParams, cfg: ArchConfig, x: jnp.ndarray,
+                *, return_state: bool = False):
+    """Train/prefill forward. x: (B, S, d) -> (B, S, d)."""
+    s_cfg = cfg.ssm
+    dt_ = cfg.dtype
+    d_in, n_heads, g, n = ssm_dims(cfg)
+    b, s, _ = x.shape
+
+    zx = jnp.einsum("bsd,de->bse", x, p.w_zx.value.astype(dt_))
+    z, xin = zx[..., :d_in], zx[..., d_in:]
+    bcx = jnp.einsum("bsd,de->bse", x, p.w_bc.value.astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p.w_dt.value.astype(dt_))
+
+    conv_in = jnp.concatenate([xin, bcx], axis=-1)
+    conv_out = _causal_conv(conv_in, p.conv_w.value, p.conv_b.value)
+    xin = conv_out[..., :d_in]
+    bmat = conv_out[..., d_in:d_in + g * n].reshape(b, s, g, n)
+    cmat = conv_out[..., d_in + g * n:].reshape(b, s, g, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p.dt_bias.value.astype(jnp.float32))
+    a = -jnp.exp(p.a_log.value.astype(jnp.float32))
+    xh = xin.reshape(b, s, n_heads, s_cfg.headdim)
+    y, state = ssd_scan(xh, dt, a, bmat, cmat, chunk=s_cfg.chunk,
+                        unroll=cfg.unroll_scans)
+    y = y + xh * p.d_skip.value.astype(dt_)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = _gated_rms_norm(y, z, p.norm.value)
+    out = jnp.einsum("bse,ed->bsd", y, p.w_out.value.astype(dt_))
+    if return_state:
+        k = s_cfg.conv_kernel
+        cache = SSMCache(conv=conv_in[:, s - (k - 1):, :], state=state)
+        return out, cache
+    return out
+
+
+def ssm_decode(p: SSMParams, cfg: ArchConfig, x: jnp.ndarray,
+               cache: SSMCache) -> Tuple[jnp.ndarray, SSMCache]:
+    """One-token decode: O(1) state update. x: (B, 1, d)."""
+    s_cfg = cfg.ssm
+    dt_ = cfg.dtype
+    d_in, n_heads, g, n = ssm_dims(cfg)
+    b = x.shape[0]
+
+    zx = jnp.einsum("bsd,de->bse", x, p.w_zx.value.astype(dt_))
+    z, xin = zx[..., :d_in], zx[..., d_in:]
+    bcx = jnp.einsum("bsd,de->bse", x, p.w_bc.value.astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p.w_dt.value.astype(dt_))
+
+    conv_in = jnp.concatenate([xin, bcx], axis=-1)        # (B, 1, C)
+    window = jnp.concatenate([cache.conv, conv_in], axis=1)  # (B, k, C)
+    w = p.conv_w.value.astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+    conv_out = jax.nn.silu(conv_out + p.conv_b.value.astype(jnp.float32))
+    conv_out = conv_out.astype(dt_)[:, None, :]           # (B, 1, C)
+
+    xin = conv_out[..., :d_in]
+    bmat = conv_out[..., d_in:d_in + g * n].reshape(b, g, n)
+    cmat = conv_out[..., d_in + g * n:].reshape(b, g, n)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p.dt_bias.value.astype(jnp.float32))  # (B, H)
+    a = -jnp.exp(p.a_log.value.astype(jnp.float32))
+    da = jnp.exp(dt * a)                                   # (B, H)
+
+    xh = xin.reshape(b, n_heads, s_cfg.headdim).astype(jnp.float32)
+    hg = n_heads // g
+    bfull = jnp.repeat(bmat, hg, axis=1).astype(jnp.float32)   # (B, H, N)
+    cfull = jnp.repeat(cmat, hg, axis=1).astype(jnp.float32)
+    # s' = exp(dt a) s + dt * B ⊗ x ; y = C · s'
+    new_state = (cache.state * da[..., None, None]
+                 + dt[..., None, None] * bfull[..., None] * xh[:, :, None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", cfull, new_state)
+    y = y + xh * p.d_skip.value.astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_in).astype(dt_)
+    y = _gated_rms_norm(y, z, p.norm.value)
+    out = jnp.einsum("bse,ed->bsd", y, p.w_out.value.astype(dt_))
+    return out, SSMCache(conv=window[:, 1:, :], state=new_state)
+
+
+def ssm_init_cache(cfg: ArchConfig, batch: int, dtype=None) -> SSMCache:
+    s = cfg.ssm
+    d_in, n_heads, g, n = ssm_dims(cfg)
+    dt_ = dtype or cfg.dtype
+    return SSMCache(
+        conv=jnp.zeros((batch, s.conv_kernel - 1, d_in + 2 * g * n), dt_),
+        state=jnp.zeros((batch, n_heads, n, s.headdim), jnp.float32))
+
+
+def ssm_reference(p: SSMParams, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: sequential per-token recurrence (the pre-SSD 'DSP form').
+
+    Used by tests to validate the chunked MXU form; also the baseline the
+    benchmark harness times to show SSD's dense-rewrite win (paper Fig. 20
+    analogue for the SSM family).
+    """
+    b, s, _ = x.shape
+    cache = ssm_init_cache(cfg, b)
+    # replicate conv exactly: run full conv then sequential SSD
+    s_cfg = cfg.ssm
+    dt_ = cfg.dtype
+    d_in, n_heads, g, n = ssm_dims(cfg)
+    zx = jnp.einsum("bsd,de->bse", x, p.w_zx.value.astype(dt_))
+    z, xin = zx[..., :d_in], zx[..., d_in:]
+    bcx = jnp.einsum("bsd,de->bse", x, p.w_bc.value.astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p.w_dt.value.astype(dt_))
+    conv_in = jnp.concatenate([xin, bcx], axis=-1)
+    conv_out = _causal_conv(conv_in, p.conv_w.value, p.conv_b.value)
+    xin = conv_out[..., :d_in]
+    bmat = conv_out[..., d_in:d_in + g * n].reshape(b, s, g, n)
+    cmat = conv_out[..., d_in + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p.dt_bias.value.astype(jnp.float32))
+    a = -jnp.exp(p.a_log.value.astype(jnp.float32))
+    xh = xin.reshape(b, s, n_heads, s_cfg.headdim).astype(jnp.float32)
+    hg = n_heads // g
+    bfull = jnp.repeat(bmat, hg, axis=2).astype(jnp.float32)
+    cfull = jnp.repeat(cmat, hg, axis=2).astype(jnp.float32)
+
+    def step(state, t):
+        da = jnp.exp(dt[:, t] * a)
+        state = (state * da[..., None, None]
+                 + dt[:, t][..., None, None] * bfull[:, t][..., None]
+                 * xh[:, t][:, :, None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", cfull[:, t], state)
+        return state, y
+
+    _, ys = jax.lax.scan(step, jnp.zeros((b, n_heads, n, s_cfg.headdim),
+                                         jnp.float32), jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1) + xh * p.d_skip.value[None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(dt_)
+    y = _gated_rms_norm(y, z, p.norm.value)
+    return jnp.einsum("bse,ed->bsd", y, p.w_out.value.astype(dt_))

@@ -1,0 +1,314 @@
+"""Decoder stack: scan over superblocks of heterogeneous layers.
+
+The stack is organized around `cfg.superblock` — the smallest repeating
+pattern of layer kinds ('attn' | 'attn_local' | 'ssm'). Parameters are built
+per superblock *position* and stacked along a leading `num_superblocks` axis,
+then the forward is a `lax.scan` over superblocks (with `jax.checkpoint` per
+block when cfg.remat): the compiled HLO is O(superblock), not O(num_layers),
+which keeps 46-layer × 512-device dry-run compiles tractable.
+
+Decode threads per-layer caches (KV for attention positions, SSMCache for
+ssm positions) through the same scan — caches are scanned-over xs/ys, the
+(B, 1, d) hidden state is the carry. All cache shapes are NodePad'ded
+(static S_max), GrAd-updated in place via dynamic_update_slice.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import (Param, layer_norm, ones_param, rms_norm, stack_params,
+                     zeros_param)
+from .config import ArchConfig
+from .mlp import mlp_forward, mlp_init
+
+
+# ---------------------------------------------------------------------------
+# Norm params / application (rmsnorm or layernorm with bias)
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ArchConfig) -> Dict[str, Param]:
+    p = {"scale": ones_param((cfg.d_model,), (None,))}
+    if cfg.norm == "layernorm":
+        p["bias"] = zeros_param((cfg.d_model,), (None,))
+    return p
+
+
+def apply_norm(p: Dict[str, Param], cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"].value, p["bias"].value)
+    return rms_norm(x, p["scale"].value, zero_centered=cfg.zero_centered_norm)
+
+
+# ---------------------------------------------------------------------------
+# Per-position layer params
+# ---------------------------------------------------------------------------
+
+
+def layer_init(key, cfg: ArchConfig, pos: int, *, cross: bool = False) -> Dict[str, Any]:
+    """One layer at superblock position `pos`: mixer + (mlp|moe) + norms."""
+    kind = cfg.superblock[pos]
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"pre_norm": norm_init(cfg)}
+    if kind.startswith("attn"):
+        p["mixer"] = attn_mod.attn_init(ks[0], cfg)
+    else:
+        p["mixer"] = ssm_mod.ssm_init(ks[0], cfg)
+    if cfg.post_norms:
+        p["post_norm"] = norm_init(cfg)
+    if cross:
+        p["pre_cross_norm"] = norm_init(cfg)
+        p["cross"] = attn_mod.attn_init(ks[3], cfg, cross=True)
+    # mamba2 has no MLP at all (d_ff == 0 and no MoE)
+    use_moe = cfg.layer_uses_moe(pos, kind)
+    if use_moe:
+        p["pre_mlp_norm"] = norm_init(cfg)
+        p["mlp"] = moe_mod.moe_init(ks[1], cfg)
+    elif cfg.d_ff > 0:
+        p["pre_mlp_norm"] = norm_init(cfg)
+        p["mlp"] = mlp_init(ks[2], cfg)
+    if cfg.post_norms and "mlp" in p:
+        p["post_mlp_norm"] = norm_init(cfg)
+    return p
+
+
+def stack_init(key, cfg: ArchConfig, *, cross: bool = False) -> List[Dict[str, Any]]:
+    """Stacked params: list over superblock positions; each leaf has leading
+    num_superblocks axis (the scan axis)."""
+    sb = len(cfg.superblock)
+    out = []
+    for pos in range(sb):
+        trees = [layer_init(jax.random.fold_in(key, blk * sb + pos), cfg, pos,
+                            cross=cross)
+                 for blk in range(cfg.num_superblocks)]
+        out.append(stack_params(trees))
+    return out
+
+
+def _is_param(x):
+    return isinstance(x, Param)
+
+
+def slice_block(stacked: List[Dict[str, Any]], blk: int) -> List[Dict[str, Any]]:
+    """Materialize one superblock's params (used by non-scan reference path)."""
+    def take(p: Param) -> Param:
+        return Param(p.value[blk], p.axes[1:])
+    return jax.tree_util.tree_map(take, stacked, is_leaf=_is_param)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_forward(p: Dict[str, Any], cfg: ArchConfig, x: jnp.ndarray, *,
+                   kind: str, positions: jnp.ndarray,
+                   enc_kv: Optional[Tuple] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-norm residual layer. Returns (x, moe_aux)."""
+    h = apply_norm(p["pre_norm"], cfg, x)
+    if kind.startswith("attn"):
+        h = attn_mod.attn_forward(p["mixer"], cfg, h, kind=kind,
+                                  positions=positions)
+    else:
+        h = ssm_mod.ssm_forward(p["mixer"], cfg, h)
+    if cfg.post_norms:
+        h = apply_norm(p["post_norm"], cfg, h)
+    x = x + h
+    if "cross" in p:
+        h = apply_norm(p["pre_cross_norm"], cfg, x)
+        h = attn_mod.attn_forward(p["cross"], cfg, h, kind="attn",
+                                  positions=positions, cross_kv=enc_kv)
+        x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" in p:
+        h = apply_norm(p["pre_mlp_norm"], cfg, x)
+        if isinstance(p["mlp"], moe_mod.MoEParams) or (
+                isinstance(p["mlp"], dict) and "w_router" in p["mlp"]):
+            h, aux = moe_mod.moe_forward(p["mlp"], cfg, h)
+        else:
+            h = mlp_forward(p["mlp"], cfg, h)
+        if cfg.post_norms:
+            h = apply_norm(p["post_mlp_norm"], cfg, h)
+        x = x + h
+    return x, aux
+
+
+def stack_forward(stacked: List[Dict[str, Any]], cfg: ArchConfig,
+                  x: jnp.ndarray, *, positions: jnp.ndarray,
+                  enc_kv_stacked: Optional[Tuple] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d). Scan over superblocks. Returns (hidden, moe_aux_sum)."""
+
+    def block_fn(carry, xs):
+        h, aux = carry
+        blk_params = xs["params"]
+        enc_kv = xs.get("enc_kv")
+        for pos, kind in enumerate(cfg.superblock):
+            h, a = _layer_forward(blk_params[pos], cfg, h, kind=kind,
+                                  positions=positions, enc_kv=enc_kv)
+            aux = aux + a
+        return (h, aux), None
+
+    if cfg.remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    xs: Dict[str, Any] = {"params": stacked}
+    if enc_kv_stacked is not None:
+        xs["enc_kv"] = enc_kv_stacked
+    (h, aux), _ = jax.lax.scan(block_fn, (x, jnp.zeros((), jnp.float32)), xs,
+                               unroll=cfg.num_superblocks if cfg.unroll_scans
+                               else 1)
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# Caches (decode)
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int) -> List[Any]:
+    """Per-position stacked caches: KV (nsb, B, S_max, KV, hd) or SSMCache."""
+    nsb = cfg.num_superblocks
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim_
+    out: List[Any] = []
+    for kind in cfg.superblock:
+        if kind.startswith("attn"):
+            shape = (nsb, batch, max_len, kvh, hd)
+            out.append({"k": jnp.zeros(shape, cfg.dtype),
+                        "v": jnp.zeros(shape, cfg.dtype)})
+        else:
+            c = ssm_mod.ssm_init_cache(cfg, batch)
+            out.append(jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (nsb,) + a.shape), c))
+    return out
+
+
+def stack_prefill(stacked: List[Dict[str, Any]], cfg: ArchConfig,
+                  x: jnp.ndarray, *, positions: jnp.ndarray,
+                  max_len: int,
+                  enc_kv_stacked: Optional[Tuple] = None
+                  ) -> Tuple[jnp.ndarray, List[Any]]:
+    """Prefill: forward + build decode caches. x: (B, S, d)."""
+    b, s, _ = x.shape
+    assert max_len >= s, (
+        f"cache capacity {max_len} < prompt length {s} (NodePad: include "
+        f"multimodal prefix positions in max_len)")
+
+    def block_fn(h, xs):
+        blk_params = xs["params"]
+        enc_kv = xs.get("enc_kv")
+        caches_out = []
+        for pos, kind in enumerate(cfg.superblock):
+            p = blk_params[pos]
+            hn = apply_norm(p["pre_norm"], cfg, h)
+            if kind.startswith("attn"):
+                k, v = attn_mod.attn_prefill_kv(p["mixer"], cfg, hn, positions)
+                pad = max_len - s
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                caches_out.append({"k": kc, "v": vc})
+                hn = attn_mod.attn_forward(p["mixer"], cfg, hn, kind=kind,
+                                           positions=positions)
+            else:
+                hn, ssm_cache = ssm_mod.ssm_forward(p["mixer"], cfg, hn,
+                                                    return_state=True)
+                caches_out.append(ssm_cache)
+            if cfg.post_norms:
+                hn = apply_norm(p["post_norm"], cfg, hn)
+            h = h + hn
+            if "cross" in p:
+                hn = apply_norm(p["pre_cross_norm"], cfg, h)
+                hn = attn_mod.attn_forward(p["cross"], cfg, hn, kind="attn",
+                                           positions=positions, cross_kv=enc_kv)
+                h = h + hn
+            if "mlp" in p:
+                hn = apply_norm(p["pre_mlp_norm"], cfg, h)
+                if isinstance(p["mlp"], moe_mod.MoEParams):
+                    hn, _ = moe_mod.moe_forward(p["mlp"], cfg, hn)
+                else:
+                    hn = mlp_forward(p["mlp"], cfg, hn)
+                if cfg.post_norms:
+                    hn = apply_norm(p["post_mlp_norm"], cfg, hn)
+                h = h + hn
+        return h, caches_out
+
+    if cfg.remat:
+        block_fn = jax.checkpoint(block_fn)
+    xs: Dict[str, Any] = {"params": stacked}
+    if enc_kv_stacked is not None:
+        xs["enc_kv"] = enc_kv_stacked
+    h, caches = jax.lax.scan(block_fn, x, xs,
+                             unroll=cfg.num_superblocks if cfg.unroll_scans
+                             else 1)
+    return h, caches
+
+
+def stack_decode(stacked: List[Dict[str, Any]], cfg: ArchConfig,
+                 x: jnp.ndarray, caches: List[Any], pos: jnp.ndarray,
+                 enc_kv_stacked: Optional[Tuple] = None
+                 ) -> Tuple[jnp.ndarray, List[Any]]:
+    """One-token decode. x: (B, 1, d); pos: scalar or (B,) write cursors.
+
+    Caches ride the scan CARRY (updated in place with a dynamic index per
+    superblock), NOT xs->ys: while-loop carries alias in place, so decode
+    holds exactly ONE cache copy in HBM (with donated inputs the step is
+    fully in-place — xs/ys stacking would double cache memory)."""
+
+    def block_fn(carry, xs):
+        h, caches_all = carry
+        blk_params = xs["params"]
+        idx = xs["idx"]
+        enc_kv = xs.get("enc_kv")
+        blk_caches = jax.tree_util.tree_map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
+            caches_all)
+        new_caches = []
+        for i, kind in enumerate(cfg.superblock):
+            p = blk_params[i]
+            hn = apply_norm(p["pre_norm"], cfg, h)
+            if kind.startswith("attn"):
+                c = blk_caches[i]
+                hn, nk, nv = attn_mod.attn_decode(p["mixer"], cfg, hn,
+                                                  c["k"], c["v"], pos, kind=kind)
+                new_caches.append({"k": nk, "v": nv})
+            else:
+                hn, nc = ssm_mod.ssm_decode(p["mixer"], cfg, hn, blk_caches[i])
+                new_caches.append(nc)
+            if cfg.post_norms:
+                hn = apply_norm(p["post_norm"], cfg, hn)
+            h = h + hn
+            if "cross" in p:
+                hn = apply_norm(p["pre_cross_norm"], cfg, h)
+                ek, ev = enc_kv
+                hn, _, _ = attn_mod.attn_decode(p["cross"], cfg, hn, ek, ev,
+                                                pos, kind="attn", cross=True)
+                h = h + hn
+            if "mlp" in p:
+                hn = apply_norm(p["pre_mlp_norm"], cfg, h)
+                if isinstance(p["mlp"], moe_mod.MoEParams):
+                    hn, _ = moe_mod.moe_forward(p["mlp"], cfg, hn)
+                else:
+                    hn = mlp_forward(p["mlp"], cfg, hn)
+                if cfg.post_norms:
+                    hn = apply_norm(p["post_mlp_norm"], cfg, hn)
+                h = h + hn
+        caches_all = jax.tree_util.tree_map(
+            lambda all_, new: jax.lax.dynamic_update_index_in_dim(
+                all_, new.astype(all_.dtype), idx, 0),
+            caches_all, new_caches)
+        return (h, caches_all), None
+
+    xs: Dict[str, Any] = {"params": stacked,
+                          "idx": jnp.arange(cfg.num_superblocks)}
+    if enc_kv_stacked is not None:
+        xs["enc_kv"] = enc_kv_stacked
+    (h, new_caches), _ = jax.lax.scan(
+        block_fn, (x, caches), xs,
+        unroll=cfg.num_superblocks if cfg.unroll_scans else 1)
+    return h, new_caches

@@ -1,0 +1,77 @@
+"""AdamW + schedules + global-norm clipping, pure JAX pytree implementation.
+
+No optax in this environment, so the optimizer is built from scratch. State
+is a pytree-of-pytrees (m, v, count) matching the parameter structure — it
+shards with the parameters under pjit (same PartitionSpecs), which is what
+the multi-pod launcher relies on.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Dict[str, Any]
+
+
+def adamw_init(params: Params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def adamw_update(params: Params, grads: Params, state: OptState, *,
+                 lr: float | jnp.ndarray = 1e-3, b1: float = 0.9,
+                 b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.0) -> Tuple[Params, OptState]:
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        new_p = p - lr * (step + weight_decay * p)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def cosine_schedule(step: jnp.ndarray, *, base_lr: float, total_steps: int,
+                    min_frac: float = 0.1) -> jnp.ndarray:
+    t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return base_lr * (min_frac + (1.0 - min_frac) * cos)
+
+
+def linear_warmup_cosine(step: jnp.ndarray, *, base_lr: float, warmup_steps: int,
+                         total_steps: int, min_frac: float = 0.1) -> jnp.ndarray:
+    warm = base_lr * (step.astype(jnp.float32) + 1.0) / max(warmup_steps, 1)
+    decay = cosine_schedule(step - warmup_steps, base_lr=base_lr,
+                            total_steps=max(total_steps - warmup_steps, 1),
+                            min_frac=min_frac)
+    return jnp.where(step < warmup_steps, warm, decay)

@@ -1,0 +1,1 @@
+from . import trainer, server  # noqa: F401

@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 CPU device by
+design (the 512-device override belongs exclusively to launch/dryrun.py)."""
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")  # kernels: interpret mode
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.data.graphs import planetoid_like
+    return planetoid_like(num_nodes=220, num_edges=500, num_feats=48,
+                          num_classes=5, seed=1)
+
+
+@pytest.fixture(scope="session")
+def padded_graph(small_graph):
+    from repro.core.graph import pad_graph
+    return pad_graph(small_graph)

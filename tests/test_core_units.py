@@ -1,0 +1,208 @@
+"""Unit + hypothesis property tests for the GraNNite core substrates."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import effop, masks
+from repro.core.graph import (dense_adjacency, gcn_norm_adjacency,
+                              mean_adjacency, symg_pack, symg_unpack)
+from repro.core.partition import (Stage, default_gnn_stages, graphsplit,
+                                  transfer_cost)
+from repro.core.quant import (calibrate_absmax, dequantize, quant_error,
+                              quantize)
+from repro.core.sparsity import (from_block_sparse, sparsity_report,
+                                 to_block_sparse, zvc_compressed_bytes,
+                                 zvc_pack, zvc_unpack)
+
+# ------------------------------------------------------------------ graphs
+
+
+@st.composite
+def graphs(draw):
+    n = draw(st.integers(5, 60))
+    e = draw(st.integers(1, 150))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 16)))
+    ei = rng.integers(0, n, size=(2, e)).astype(np.int32)
+    return ei, n
+
+
+@given(graphs())
+@settings(max_examples=30, deadline=None)
+def test_gcn_norm_rows_bounded(g):
+    """Property: Â = D^-1/2 (A+I) D^-1/2 is symmetric-ish w/ bounded rows."""
+    ei, n = g
+    cap = ((n + 127) // 128) * 128
+    a = gcn_norm_adjacency(ei, n, cap)
+    assert a.shape == (cap, cap)
+    assert np.all(a >= 0)
+    assert np.all(a[n:, :] == 0) and np.all(a[:, n:] == 0)  # padding inert
+    # row sums of the normalized adjacency are <= sqrt(deg) bounded; all
+    # finite and no NaN from zero-degree nodes
+    assert np.isfinite(a).all()
+
+
+@given(graphs())
+@settings(max_examples=30, deadline=None)
+def test_mean_adjacency_rows_sum_to_one_or_zero(g):
+    ei, n = g
+    cap = ((n + 127) // 128) * 128
+    a = mean_adjacency(ei, n, cap)
+    rs = a.sum(axis=1)
+    ok = np.isclose(rs, 1.0, atol=1e-5) | np.isclose(rs, 0.0)
+    assert ok.all()
+
+
+@given(st.integers(2, 50), st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_symg_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.random((n, n)).astype(np.float32)
+    sym = (m + m.T) / 2
+    packed, nn = symg_pack(sym)
+    assert packed.size == n * (n + 1) // 2    # the paper's ~2x storage claim
+    np.testing.assert_allclose(symg_unpack(packed, nn), sym, atol=1e-6)
+
+
+def test_symg_rejects_asymmetric():
+    with pytest.raises(ValueError):
+        symg_pack(np.arange(9, dtype=np.float32).reshape(3, 3))
+
+
+# ------------------------------------------------------------------ GraSp
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.floats(0.0, 0.3),
+       st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_block_sparse_roundtrip(rb, cb, density, seed):
+    rng = np.random.default_rng(seed)
+    n, m = rb * 128, cb * 128
+    a = ((rng.random((n, m)) < density) * rng.random((n, m))).astype(np.float32)
+    sp = to_block_sparse(a)
+    np.testing.assert_array_equal(from_block_sparse(sp), a)
+    assert 0.0 <= sp.density <= 1.0
+
+
+@given(st.integers(10, 400), st.floats(0.0, 0.5), st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_zvc_roundtrip_and_size(n, density, seed):
+    rng = np.random.default_rng(seed)
+    x = ((rng.random(n) < density) * rng.standard_normal(n)).astype(np.float32)
+    vals, bitmap, shape = zvc_pack(x)
+    np.testing.assert_array_equal(zvc_unpack(vals, bitmap, shape), x)
+    # compressed size formula consistent
+    assert zvc_compressed_bytes(x) == vals.nbytes + (x.size + 7) // 8
+
+
+def test_sparsity_report_cora_like():
+    # the paper's claim is about REAL graph scale: use the Cora-shaped graph
+    from repro.core.graph import pad_graph
+    from repro.core.sparsity import apply_reorder, bfs_reorder
+    from repro.data.graphs import cora_like
+    pg = pad_graph(cora_like())
+    rep = sparsity_report(pg.norm_adj)
+    assert rep["element_density"] < 0.01       # paper: >99% zeros
+    assert rep["zvc_bytes"] < rep["dense_bytes"] / 5
+    # element-level ZVC skips are huge; 128x128 BLOCK skips need locality:
+    # BFS reordering (beyond-paper, DESIGN.md §6) must densify blocks
+    perm = bfs_reorder(pg.adj, pg.num_nodes)
+    rep2 = sparsity_report(apply_reorder(pg.norm_adj, perm))
+    assert rep2["flop_skip_fraction"] > rep["flop_skip_fraction"]
+    assert rep2["flop_skip_fraction"] > 0.4
+
+
+def test_bfs_reorder_is_permutation_and_preserves_matmul():
+    from repro.core.graph import pad_graph
+    from repro.core.sparsity import apply_reorder, bfs_reorder
+    from repro.data.graphs import planetoid_like
+    g = planetoid_like(num_nodes=150, num_edges=300, num_feats=8,
+                       num_classes=3, seed=2)
+    pg = pad_graph(g)
+    perm = bfs_reorder(pg.adj, pg.num_nodes)
+    assert sorted(perm.tolist()) == list(range(pg.capacity))
+    # aggregation in permuted space == permuted aggregation
+    h = np.random.default_rng(0).standard_normal(
+        (pg.capacity, 8)).astype(np.float32)
+    a = pg.norm_adj
+    lhs = apply_reorder(a, perm) @ h[perm]
+    rhs = (a @ h)[perm]
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5)
+
+
+# ------------------------------------------------------------------ EffOp
+
+
+@given(st.integers(2, 40), st.integers(1, 12), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_one_hot_gather_equals_gather(n, f, seed):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, n, size=17))
+    np.testing.assert_allclose(np.asarray(effop.one_hot_gather(h, idx)),
+                               np.asarray(h[idx]), rtol=1e-6)
+
+
+@given(st.integers(2, 30), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_segment_softmax_dense_rows_sum_to_one(n, seed):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    adj = (rng.random((n, n)) < 0.4).astype(np.float32)
+    np.fill_diagonal(adj, 1.0)
+    bias = jnp.asarray(np.where(adj > 0, 0.0, masks.NEG_INF).astype(np.float32))
+    p = effop.segment_softmax_dense(logits, bias)
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-5)
+    # probability mass only on edges (skip when the graph is complete)
+    off_edge = np.asarray(p)[adj == 0]
+    assert off_edge.size == 0 or float(off_edge.max()) < 1e-6
+
+
+# ---------------------------------------------------------------- QuantGr
+
+
+@given(st.integers(4, 200), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_quant_roundtrip_error_bounded(n, seed):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    err = quant_error(x)
+    assert err < 0.02   # int8 symmetric: ~0.4% typical, 2% safe bound
+
+
+def test_quant_symmetric_zero_point():
+    import jax.numpy as jnp
+    x = jnp.asarray(np.array([-1.0, 0.0, 1.0], np.float32))
+    q = calibrate_absmax(x)
+    xq = quantize(x, q)
+    assert int(xq[1]) == 0                      # symmetric: zero -> 0
+    assert int(xq[0]) == -int(xq[2])
+
+
+# -------------------------------------------------------------- GraphSplit
+
+
+def test_graphsplit_prefers_host_preprocessing():
+    """The paper's core finding: control-heavy preprocessing belongs on the
+    CPU, dense compute on the accelerator — the cost model must discover
+    this from the latency/transfer structure alone."""
+    stages = default_gnn_stages(3000, 10000, 1433, 64, capacity=3072)
+    plan = graphsplit(stages)
+    placement = plan.placement(stages)
+    assert placement[0] == "host"               # build_adjacency
+    assert placement[1] == "host"               # degree/norm (PreG)
+    assert placement[2] == "device"             # combine matmul
+    assert placement[3] == "device"             # aggregate matmul
+
+
+def test_graphsplit_degenerate_cases():
+    fast_host = [Stage("a", 1e-6, 1.0, output_bytes=100)]
+    assert graphsplit(fast_host).cut == 1       # everything on host
+    fast_dev = [Stage("a", 1.0, 1e-6, output_bytes=100)]
+    assert graphsplit(fast_dev).cut == 0        # everything on device
+
+
+def test_transfer_cost_monotone():
+    assert transfer_cost(10 ** 6) < transfer_cost(10 ** 9)

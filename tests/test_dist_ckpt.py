@@ -1,0 +1,183 @@
+"""Distribution rules, checkpointing (atomic/keep-k/elastic), compression."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import (latest_step, restore_checkpoint,
+                                   save_checkpoint)
+from repro.configs import ARCHS, reduced
+from repro.dist import sharding as shd
+from repro.nn import lm
+from repro.nn.common import Param
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------------- sharding
+
+
+def _mesh11():
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def test_spec_divisibility_fallback():
+    mesh = _mesh11()
+    # with model axis size 1 everything divides; simulate a bigger axis by
+    # constructing specs directly
+    p = Param(jnp.zeros((9, 64)), ("heads", "embed"))
+    spec = shd.spec_for_axes(p.axes, p.value.shape, mesh)
+    assert isinstance(spec, jax.sharding.PartitionSpec)
+
+
+def test_param_specs_cover_every_leaf():
+    cfg = reduced(ARCHS["olmoe-1b-7b"])
+    params = jax.eval_shape(lambda: lm.lm_init(jax.random.PRNGKey(0), cfg))
+    mesh = _mesh11()
+    specs = shd.param_specs(params, mesh)
+    n_params = len(jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, Param)))
+    n_specs = len(jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)))
+    assert n_params == n_specs > 0
+
+
+def test_production_mesh_rules_subprocess():
+    """Full 512-device rule check runs in a subprocess (XLA_FLAGS isolation):
+    every assigned arch must produce valid, divisible PartitionSpecs on both
+    production meshes."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import jax, json
+        from repro.configs import ARCHS
+        from repro.dist import sharding as shd
+        from repro.launch.mesh import make_production_mesh
+        from repro.launch import specs as S
+        out = {}
+        for multi in (False, True):
+            mesh = make_production_mesh(multi_pod=multi)
+            for name, cfg in ARCHS.items():
+                params = S.abstract_params(cfg)
+                specs = shd.param_specs(params, mesh)
+                flat = jax.tree_util.tree_leaves(
+                    specs, is_leaf=lambda x: isinstance(
+                        x, jax.sharding.PartitionSpec))
+                pflat = jax.tree_util.tree_leaves(
+                    params, is_leaf=lambda x: hasattr(x, "axes"))
+                for p, s in zip(pflat, flat):
+                    for dim, entry in zip(p.value.shape, tuple(s)):
+                        if entry is None: continue
+                        axes = entry if isinstance(entry, tuple) else (entry,)
+                        k = 1
+                        for a in axes: k *= mesh.shape[a]
+                        assert dim % k == 0, (name, p.value.shape, s)
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env={**os.environ,
+                                       "PYTHONPATH": f"{REPO}/src"})
+    assert "OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_compressed_psum_subprocess():
+    """int8-compressed gradient all-reduce == exact mean within quant error
+    (8 fake devices, shard_map)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.dist.compress import compressed_psum_mean, exact_psum_mean
+        mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 32))
+
+        def body(xs):
+            g = xs[0]
+            mean, resid = compressed_psum_mean(g, ("data",))
+            exact = exact_psum_mean(g, ("data",))
+            return mean[None], exact[None], resid[None]
+
+        f = jax.shard_map(body, mesh=mesh, in_specs=(P("data"),),
+                          out_specs=(P("data"), P("data"), P("data")))
+        mean, exact, resid = f(x)
+        mean, exact = np.asarray(mean[0]), np.asarray(exact[0])
+        scale = np.abs(x).max() / 127.0
+        err = np.abs(mean - exact).max()
+        assert err <= scale + 1e-7, (err, scale)
+        # error feedback residual should reconstruct: g = represented + resid
+        print("OK", err / (np.abs(exact).max() + 1e-9))
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env={**os.environ,
+                                       "PYTHONPATH": f"{REPO}/src"})
+    assert "OK" in r.stdout, (r.stdout, r.stderr[-2000:])
+
+
+# ---------------------------------------------------------------- ckpt
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (32, 16)),
+                       "b": jnp.zeros((16,))},
+            "opt": {"m": jnp.ones((32, 16)), "count": jnp.asarray(7)},
+            "step": jnp.asarray(123, jnp.int32)}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 5, tree)
+    step, restored = restore_checkpoint(str(tmp_path), tree)
+    assert step == 5
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_keep_k(tmp_path):
+    tree = _tree()
+    for s in range(6):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_ckpt_atomicity_tmp_never_visible(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    assert not any(d.startswith("tmp.") for d in os.listdir(tmp_path))
+
+
+def test_ckpt_symg_packs_symmetric(tmp_path, padded_graph):
+    """The GNN norm adjacency (symmetric) must be stored triangular."""
+    tree = {"norm_adj": jnp.asarray(padded_graph.norm_adj)}
+    save_checkpoint(str(tmp_path), 0, tree)
+    with open(os.path.join(tmp_path, "step_0000000000/manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["symg"], "symmetric matrix should be SymG-packed"
+    _, restored = restore_checkpoint(str(tmp_path), tree)
+    np.testing.assert_allclose(np.asarray(restored["norm_adj"]),
+                               padded_graph.norm_adj, atol=1e-6)
+
+
+def test_ckpt_elastic_reshard(tmp_path):
+    """Restore under a different sharding (elastic restart)."""
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 9, tree)
+    mesh = _mesh11()
+    sh = jax.tree_util.tree_map(
+        lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        tree)
+    step, restored = restore_checkpoint(str(tmp_path), tree, shardings=sh)
+    assert step == 9
+    w = restored["params"]["w"]
+    assert w.sharding.mesh.shape == {"data": 1, "model": 1}

@@ -1,0 +1,192 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes as the brief requires."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def k(i):
+    return jax.random.fold_in(KEY, i)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@pytest.mark.parametrize("m,kk,n", [(128, 128, 128), (256, 128, 384),
+                                    (384, 256, 128), (512, 384, 256),
+                                    (130, 70, 90)])   # ragged: wrapper pads
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, kk, n, dtype):
+    a = jax.random.normal(k(1), (m, kk), dtype)
+    b = jax.random.normal(k(2), (kk, n), dtype)
+    got = ops.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    # f32 tolerance allows k-block accumulation-order differences
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+# ------------------------------------------------------------ int8 matmul
+
+
+@pytest.mark.parametrize("m,kk,n", [(128, 128, 128), (256, 256, 128),
+                                    (100, 60, 130)])
+def test_int8_matmul_sweep(m, kk, n):
+    xq = jax.random.randint(k(3), (m, kk), -127, 128, jnp.int8)
+    wq = jax.random.randint(k(4), (kk, n), -127, 128, jnp.int8)
+    sx = jnp.float32(0.013)
+    sw = jax.random.uniform(k(5), (n,), jnp.float32, 0.001, 0.05)
+    got = ops.int8_matmul(xq, wq, sx, sw)
+    want = ref.int8_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ------------------------------------------------------------ bitmap spmm
+
+
+@pytest.mark.parametrize("n,f,density", [(256, 128, 0.02), (384, 64, 0.1),
+                                         (512, 96, 0.0)])
+def test_bitmap_spmm_sweep(n, f, density, rng):
+    from repro.core.sparsity import to_block_sparse
+    a = (rng.random((n, n)) < density) * rng.random((n, n))
+    a = a.astype(np.float32)
+    h = rng.standard_normal((n, f)).astype(np.float32)
+    got = ops.bitmap_spmm(to_block_sparse(a), jnp.asarray(h))
+    np.testing.assert_allclose(np.asarray(got), a @ h, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ gat kernel
+
+
+@pytest.mark.parametrize("n,heads,f", [(256, 4, 128), (128, 8, 64),
+                                       (384, 1, 32)])
+def test_gat_attention_sweep(n, heads, f, rng):
+    h = jax.random.normal(k(6), (n, heads, f))
+    a_dst = jax.random.normal(k(7), (n, heads))
+    a_src = jax.random.normal(k(8), (n, heads))
+    adj = (rng.random((n, n)) < 0.03).astype(np.float32)
+    np.fill_diagonal(adj, 1.0)
+    bias = np.where(adj > 0, 0.0, -1e9).astype(np.float32)
+    got = ops.gat_attention(h, a_dst, a_src, jnp.asarray(bias))
+    want = ref.gat_attention_ref(h, a_dst, a_src, jnp.asarray(bias))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------ sage max
+
+
+@pytest.mark.parametrize("n,f", [(256, 128), (128, 200), (384, 64)])
+def test_sage_max_sweep(n, f, rng):
+    mask = (rng.random((n, n)) < 0.05).astype(np.float32)
+    h = jnp.abs(jax.random.normal(k(9), (n, f)))   # GrAx3 precondition: h >= 0
+    got = ops.sage_max(jnp.asarray(mask), h)
+    want = ref.sage_max_ref(jnp.asarray(mask), h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ------------------------------------------------------- flash attention
+
+
+@pytest.mark.parametrize("s,hh,kv,d", [(256, 4, 2, 64), (512, 8, 8, 64),
+                                       (256, 9, 3, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(s, hh, kv, d, causal):
+    q = jax.random.normal(k(10), (2, s, hh, d))
+    kk_ = jax.random.normal(k(11), (2, s, kv, d))
+    v = jax.random.normal(k(12), (2, s, kv, d))
+    got = ops.flash_attention(q, kk_, v, causal=causal)
+    want = ref.flash_attention_ref(q, kk_, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_window_softcap():
+    q = jax.random.normal(k(13), (1, 256, 4, 64))
+    kk_ = jax.random.normal(k(14), (1, 256, 4, 64))
+    v = jax.random.normal(k(15), (1, 256, 4, 64))
+    got = ops.flash_attention(q, kk_, v, causal=True, window=64, softcap=50.0)
+    want = ref.flash_attention_ref(q, kk_, v, causal=True, window=64,
+                                   softcap=50.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# -------------------------------------------- chunked-jax oracle vs flash
+
+
+def test_chunked_attention_matches_flash_ref():
+    from repro.nn.attention import chunked_attention
+    q = jax.random.normal(k(16), (2, 256, 8, 64))
+    kk_ = jax.random.normal(k(17), (2, 256, 2, 64))
+    v = jax.random.normal(k(18), (2, 256, 2, 64))
+    got = chunked_attention(q, kk_, v, causal=True, q_chunk=64, kv_chunk=128)
+    want = ref.flash_attention_ref(q, kk_, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [None, 100])
+def test_chunked_attention_block_skip_exact(window):
+    """§Perf block-skip must be EXACT (skipped blocks are fully masked)."""
+    from repro.nn.attention import chunked_attention
+    q = jax.random.normal(k(30), (2, 256, 8, 64))
+    kk_ = jax.random.normal(k(31), (2, 256, 2, 64))
+    v = jax.random.normal(k(32), (2, 256, 2, 64))
+    want = ref.flash_attention_ref(q, kk_, v, causal=True, window=window)
+    got = chunked_attention(q, kk_, v, causal=True, window=window,
+                            q_chunk=64, kv_chunk=64, block_skip=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_block_skip_differentiable():
+    from repro.nn.attention import chunked_attention
+    q = jax.random.normal(k(33), (1, 128, 4, 32))
+    kk_ = jax.random.normal(k(34), (1, 128, 4, 32))
+    v = jax.random.normal(k(35), (1, 128, 4, 32))
+
+    def loss(qq):
+        return chunked_attention(qq, kk_, v, causal=True, q_chunk=32,
+                                 kv_chunk=32, block_skip=True).sum()
+
+    g = jax.grad(loss)(q)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_chunked_attention_bf16_scores_quality():
+    """QuantGr-on-scores (§Perf iter 3): bf16 score buffers lose < 2e-2."""
+    from repro.nn.attention import chunked_attention
+    q = jax.random.normal(k(36), (2, 256, 4, 64))
+    kk_ = jax.random.normal(k(37), (2, 256, 4, 64))
+    v = jax.random.normal(k(38), (2, 256, 4, 64))
+    want = ref.flash_attention_ref(q, kk_, v, causal=True)
+    got = chunked_attention(q, kk_, v, causal=True, q_chunk=64, kv_chunk=64,
+                            logits_bf16=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_chunked_attention_ragged_and_kvlen():
+    from repro.nn.attention import chunked_attention
+    q = jax.random.normal(k(19), (1, 80, 4, 32))     # 80 % 64 != 0: pads
+    kk_ = jax.random.normal(k(20), (1, 80, 4, 32))
+    v = jax.random.normal(k(21), (1, 80, 4, 32))
+    got = chunked_attention(q, kk_, v, causal=True, q_chunk=64, kv_chunk=64,
+                            kv_len=jnp.asarray(50))
+    # oracle: mask keys >= 50
+    want = ref.flash_attention_ref(q[:, :, :, :], kk_[:, :50], v[:, :50],
+                                   causal=True)
+    np.testing.assert_allclose(np.asarray(got[:, :50], np.float32),
+                               np.asarray(want[:, :50], np.float32),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,117 @@
+"""Launch-layer units that don't need the 512-device env: input specs,
+roofline HLO parsing, cost-config construction, shape rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.launch import roofline as R
+from repro.launch import specs as S
+from repro.nn.config import SHAPES
+
+
+def test_runnable_rules():
+    ok, _ = S.runnable(ARCHS["mamba2-2.7b"], SHAPES["long_500k"])
+    assert ok
+    ok, why = S.runnable(ARCHS["qwen3-4b"], SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in why
+    ok, _ = S.runnable(ARCHS["jamba-v0.1-52b"], SHAPES["long_500k"])
+    assert ok
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_input_specs_shapes(arch):
+    cfg = ARCHS[arch]
+    for sname, shape in SHAPES.items():
+        if not S.runnable(cfg, shape)[0]:
+            continue
+        specs = S.input_specs(cfg, shape)
+        leaves = jax.tree_util.tree_leaves(specs)
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        if shape.kind == "train":
+            assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+        if shape.kind == "decode":
+            assert specs["token"].shape == (shape.global_batch,)
+            # KV caches (nsb, B, S, KV, hd) hold the assigned context length
+            kv = [l for l in jax.tree_util.tree_leaves(specs["caches"])
+                  if len(l.shape) == 5
+                  and l.shape[3:] == (cfg.num_kv_heads, cfg.head_dim_)]
+            if not cfg.attention_free:
+                assert kv and kv[0].shape[2] == shape.seq_len
+
+
+def test_abstract_params_match_param_count():
+    """eval_shape'd parameter tree総 size must equal the analytic count."""
+    for arch in ("smollm-135m", "olmoe-1b-7b", "mamba2-2.7b"):
+        cfg = ARCHS[arch]
+        params = S.abstract_params(cfg)
+        total = sum(int(np.prod(l.shape))
+                    for l in jax.tree_util.tree_leaves(params))
+        analytic = cfg.param_count()
+        # analytic count ignores norms/biases/dt params — allow 2%
+        assert abs(total - analytic) / analytic < 0.02, (arch, total, analytic)
+
+
+def test_cost_config_scales_layers():
+    cfg = ARCHS["jamba-v0.1-52b"]
+    c1 = S.cost_config(cfg, 1)
+    c2 = S.cost_config(cfg, 2)
+    assert c1.num_layers == len(cfg.superblock)
+    assert c2.num_layers == 2 * len(cfg.superblock)
+    assert c1.unroll_scans and c2.unroll_scans
+    w = ARCHS["whisper-base"]
+    assert S.cost_config(w, 2).encoder.num_layers == 2
+
+
+def test_collective_bytes_parsing():
+    hlo = """
+  %ar = f32[1024,512]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[64,128]{1,0} all-gather(%y), dimensions={0}
+  %rs = (f32[256]{0}, f32[256]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %a2a = f32[32,32]{1,0} all-to-all(%z), dimensions={1}
+  %cp = u8[100]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[8,8]{1,0} dot(%p, %q)
+"""
+    got = R.collective_bytes(hlo)
+    assert got["all-reduce"] == 1024 * 512 * 4
+    assert got["all-gather"] == 64 * 128 * 2
+    assert got["reduce-scatter"] == 2 * 256 * 4
+    assert got["all-to-all"] == 32 * 32 * 4
+    assert got["collective-permute"] == 100
+    assert "dot" not in got
+
+
+def test_collective_bytes_async_counted_once():
+    hlo = """
+  %s = f32[128]{0} all-reduce-start(%x)
+  %d = f32[128]{0} all-reduce-done(%s)
+"""
+    got = R.collective_bytes(hlo)
+    assert got.get("all-reduce", 0) == 128 * 4
+
+
+def test_roofline_terms_math():
+    t = R.RooflineTerms(arch="a", shape="train_4k", mesh="single",
+                        flops_per_device=197e12, bytes_per_device=819e9,
+                        coll_bytes_per_device=int(50e9), coll_breakdown={},
+                        model_flops=197e12 * 256, n_devices=256)
+    assert abs(t.t_compute - 1.0) < 1e-9
+    assert abs(t.t_memory - 1.0) < 1e-9
+    assert abs(t.t_collective - 1.0) < 1e-9
+    assert t.useful_flops_fraction == 1.0
+    assert t.roofline_fraction == 1.0
+
+
+def test_model_flops_moe_uses_active():
+    cfg = ARCHS["olmoe-1b-7b"]
+    f = R.model_flops_estimate(cfg, SHAPES["train_4k"])
+    dense_equiv = 6.0 * cfg.param_count() * SHAPES["train_4k"].global_batch \
+        * SHAPES["train_4k"].seq_len
+    assert f < dense_equiv / 3        # top-8 of 64 experts
+
+
+def test_microbatch_policy():
+    assert S.train_microbatches(ARCHS["gemma2-27b"], SHAPES["train_4k"], 16) == 8
+    assert S.train_microbatches(ARCHS["gemma2-27b"], SHAPES["train_4k"], 32) == 8
+    assert S.train_microbatches(ARCHS["gemma2-27b"], SHAPES["prefill_32k"], 16) == 2

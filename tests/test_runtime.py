@@ -1,0 +1,174 @@
+"""Runtime behaviour: trainer fault tolerance, stragglers, data determinism,
+server bucketing / zero-recompile / correctness."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.data.synthetic import TokenStream
+from repro.runtime.server import ServeConfig, Server
+from repro.runtime.trainer import TrainConfig, Trainer
+
+
+def _cfg():
+    return reduced(ARCHS["smollm-135m"])
+
+
+# ---------------------------------------------------------------- data
+
+
+def test_tokenstream_deterministic_and_host_sharded():
+    s = TokenStream(vocab_size=128, seq_len=16, global_batch=8, seed=3)
+    a = s.batch_at(5)
+    b = s.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = s.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # host sharding partitions the global batch deterministically
+    h0 = TokenStream(vocab_size=128, seq_len=16, global_batch=8, seed=3,
+                     num_hosts=2, host_id=0).batch_at(5)
+    h1 = TokenStream(vocab_size=128, seq_len=16, global_batch=8, seed=3,
+                     num_hosts=2, host_id=1).batch_at(5)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+    assert (a["labels"] == np.roll(np.concatenate(
+        [a["tokens"], a["labels"][:, -1:]], 1), -1, 1)[:, :-1]).all()
+
+
+# -------------------------------------------------------------- trainer
+
+
+def test_trainer_loss_decreases(tmp_path):
+    tc = TrainConfig(steps=8, seq_len=32, global_batch=4, lr=3e-3,
+                     ckpt_dir=None)
+    tr = Trainer(_cfg(), tc)
+    tr.run()
+    s = tr.summary()
+    assert s["steps"] == 8
+    assert s["last_loss"] < s["first_loss"]
+
+
+def test_trainer_restart_resumes_from_checkpoint(tmp_path):
+    """Chaos drill: injected crash at step 5; supervisor must restore the
+    step-4 checkpoint and complete the run with restarts == 1."""
+    crashed = {"done": False}
+
+    def injector(step):
+        if step == 5 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    tc = TrainConfig(steps=8, seq_len=32, global_batch=4,
+                     ckpt_dir=str(tmp_path), ckpt_every=2)
+    tr = Trainer(_cfg(), tc, failure_injector=injector)
+    tr.run()
+    assert tr.restarts == 1
+    assert tr.step == 8
+    # deterministic data: the re-run of steps 4..5 used identical batches —
+    # loss history after restart must continue sanely (finite)
+    assert all(np.isfinite(r.loss) for r in tr.history)
+
+
+def test_trainer_gives_up_after_max_failures(tmp_path):
+    def injector(step):
+        raise RuntimeError("persistent failure")
+
+    tc = TrainConfig(steps=4, seq_len=32, global_batch=4,
+                     ckpt_dir=str(tmp_path), ckpt_every=1)
+    tr = Trainer(_cfg(), tc, failure_injector=injector)
+    with pytest.raises(RuntimeError):
+        tr.run(max_failures=2)
+
+
+def test_trainer_microbatch_equivalence():
+    """Gradient accumulation must match the single-batch gradient step."""
+    import jax
+    cfg = _cfg()
+    t1 = TrainConfig(steps=1, seq_len=32, global_batch=4, microbatches=1,
+                     clip_norm=1e9)
+    t2 = TrainConfig(steps=1, seq_len=32, global_batch=4, microbatches=4,
+                     clip_norm=1e9)
+    tr1 = Trainer(cfg, t1)
+    tr2 = Trainer(cfg, t2)
+    tr1.run()
+    tr2.run()
+    l1 = jax.tree_util.tree_leaves(tr1.params)
+    l2 = jax.tree_util.tree_leaves(tr2.params)
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-5)
+
+
+def test_straggler_detection():
+    import time as _time
+    tc = TrainConfig(steps=6, seq_len=32, global_batch=2,
+                     straggler_factor=2.0)
+    tr = Trainer(_cfg(), tc)
+    orig = tr.train_step
+
+    calls = {"n": 0}
+
+    def slow_step(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 5:
+            # sleep relative to the observed EWMA so the drill works no
+            # matter how slow compilation made the first steps
+            _time.sleep(max(0.2, 4.0 * (tr._ewma or 0.0)))
+        return orig(*a, **k)
+
+    tr.train_step = slow_step
+    tr.run()
+    assert sum(r.straggler for r in tr.history) >= 1
+
+
+# --------------------------------------------------------------- server
+
+
+def test_server_bucketing_and_zero_recompile():
+    cfg = _cfg()
+    sv = Server(cfg, ServeConfig(buckets=(16, 32), max_len=64, batch_slots=2))
+    rng = np.random.default_rng(0)
+    for n in (5, 9, 17, 30, 12, 3):
+        sv.submit(rng.integers(0, cfg.vocab_size, size=n), max_new_tokens=3)
+    sv.run()
+    s = sv.summary()
+    assert s["requests"] == 6
+    # <= one prefill blob per bucket + one decode blob (NodePad guarantee)
+    assert s["compiled_blobs"] <= len(sv.sc.buckets) + 1
+    assert s["tokens_out"] == 18
+
+
+def test_server_rejects_oversized_prompt():
+    cfg = _cfg()
+    sv = Server(cfg, ServeConfig(buckets=(16,), max_len=32, batch_slots=1))
+    sv.submit(np.zeros(17, np.int32))
+    with pytest.raises(ValueError):
+        sv.run()
+
+
+def test_server_wave_mode_for_ssm():
+    cfg = reduced(ARCHS["mamba2-2.7b"])
+    sv = Server(cfg, ServeConfig(buckets=(16,), max_len=32, batch_slots=2,
+                                 mode="continuous"))
+    assert sv.sc.mode == "wave"      # forced: recurrent state needs waves
+    sv.submit(np.arange(8) % cfg.vocab_size, max_new_tokens=2)
+    sv.run()
+    assert sv.summary()["requests"] == 1
+
+
+def test_server_greedy_matches_reference():
+    """Wave decode (same-length prompts) must equal lm.greedy_generate."""
+    import jax
+    import jax.numpy as jnp
+    from repro.nn import lm
+    cfg = _cfg()
+    sv = Server(cfg, ServeConfig(buckets=(16,), max_len=32, batch_slots=2),
+                seed=0)
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, cfg.vocab_size, size=(2, 16))
+    for i in range(2):
+        sv.submit(prompts[i], max_new_tokens=4)
+    done = sorted(sv.run(), key=lambda r: r.uid)
+    ref = lm.greedy_generate(sv.params, cfg, jnp.asarray(prompts),
+                             steps=3, max_len=32)
+    got = np.stack([r.output for r in done])
+    np.testing.assert_array_equal(got, np.asarray(ref))

@@ -1,0 +1,163 @@
+"""SSD (Mamba2) and MoE invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced
+from repro.nn import moe as moe_mod
+from repro.nn import ssm as ssm_mod
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _ssm_cfg(chunk=32):
+    cfg = reduced(ARCHS["mamba2-2.7b"])
+    return dataclasses.replace(
+        cfg, ssm=dataclasses.replace(cfg.ssm, chunk=chunk))
+
+
+# ------------------------------------------------------------------- SSD
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 32), (128, 32), (96, 96), (64, 16)])
+def test_ssd_chunked_equals_sequential(s, chunk):
+    """The paper-spirit check: the dense chunked (MXU) form must equal the
+    sequential recurrence (DSP form) exactly."""
+    cfg = _ssm_cfg(chunk)
+    p = ssm_mod.ssm_init(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, s), (2, s, cfg.d_model))
+    y_ssd = ssm_mod.ssm_forward(p, cfg, x)
+    y_seq = ssm_mod.ssm_reference(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_ssd), np.asarray(y_seq),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ssd_chunk_size_invariance():
+    """Output must not depend on the chunking (pure reformulation)."""
+    x = jax.random.normal(KEY, (1, 64, 128))
+    outs = []
+    for chunk in (16, 32, 64):
+        cfg = _ssm_cfg(chunk)
+        p = ssm_mod.ssm_init(jax.random.PRNGKey(1), cfg)
+        outs.append(np.asarray(ssm_mod.ssm_forward(p, cfg, x)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-4, atol=1e-5)
+
+
+def test_ssm_decode_chain_matches_forward():
+    """Prefill state + N decode steps == forward over the whole sequence."""
+    cfg = _ssm_cfg(16)
+    p = ssm_mod.ssm_init(KEY, cfg)
+    s, extra = 32, 4
+    x = jax.random.normal(jax.random.fold_in(KEY, 9),
+                          (1, s + extra, cfg.d_model))
+    y_full = ssm_mod.ssm_forward(p, cfg, x)
+    y_pre, cache = ssm_mod.ssm_forward(p, cfg, x[:, :s], return_state=True)
+    ys = [y_pre]
+    for t in range(extra):
+        yt, cache = ssm_mod.ssm_decode(p, cfg, x[:, s + t: s + t + 1], cache)
+        ys.append(yt)
+    y_chain = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_chain),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_state_decay_property():
+    """A(h) < 0 => with zero input the state decays monotonically."""
+    cfg = _ssm_cfg(16)
+    p = ssm_mod.ssm_init(KEY, cfg)
+    cache = ssm_mod.ssm_init_cache(cfg, 1)
+    cache = ssm_mod.SSMCache(conv=cache.conv,
+                             state=jnp.ones_like(cache.state))
+    x = jnp.zeros((1, 1, cfg.d_model))
+    _, c1 = ssm_mod.ssm_decode(p, cfg, x, cache)
+    _, c2 = ssm_mod.ssm_decode(p, cfg, x, c1)
+    n0 = float(jnp.abs(cache.state).sum())
+    n1 = float(jnp.abs(c1.state).sum())
+    n2 = float(jnp.abs(c2.state).sum())
+    assert n1 < n0 and n2 < n1
+
+
+# ------------------------------------------------------------------- MoE
+
+
+def _moe_cfg():
+    return reduced(ARCHS["olmoe-1b-7b"])
+
+
+def test_moe_dispatch_mask_properties():
+    """EffOp dispatch invariants: <=1 slot per (token, expert), capacity
+    respected, combine gates bounded by dispatch support."""
+    cfg = _moe_cfg()
+    m = cfg.moe
+    g = 64
+    logits = jax.random.normal(KEY, (g, m.num_experts))
+    gates, idx, probs = moe_mod._route(m, logits)
+    cap = moe_mod.capacity(m, g)
+    dispatch, combine = moe_mod._dispatch_masks(m, gates, idx, cap)
+    d = np.asarray(dispatch)
+    assert d.shape == (g, m.num_experts, cap)
+    assert set(np.unique(d)).issubset({0.0, 1.0})
+    # each (expert, slot) holds at most one token
+    assert d.sum(axis=0).max() <= 1.0 + 1e-6
+    # each token occupies at most top_k slots
+    assert d.sum(axis=(1, 2)).max() <= m.top_k + 1e-6
+    # combine is supported only where dispatch is
+    c = np.asarray(combine)
+    assert (c[d == 0] == 0).all()
+    assert c.min() >= 0
+
+
+def test_moe_forward_finite_and_aux_positive():
+    cfg = _moe_cfg()
+    p = moe_mod.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model), cfg.dtype)
+    y, aux = moe_mod.moe_forward(p, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(aux) > 0
+
+
+def test_moe_grouping_invariance():
+    """vmap'd group dispatch: result must not depend on group size as long
+    as capacity doesn't truncate (generous capacity_factor)."""
+    cfg = _moe_cfg()
+    big_cf = dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    outs = []
+    for gs in (32, 64, 128):
+        c = dataclasses.replace(cfg, moe=dataclasses.replace(big_cf,
+                                                             group_size=gs))
+        p = moe_mod.moe_init(jax.random.PRNGKey(5), c)
+        x = jax.random.normal(KEY, (1, 128, c.d_model), jnp.float32)
+        y, _ = moe_mod.moe_forward(p, c, x)
+        outs.append(np.asarray(y, np.float32))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-4, atol=2e-5)
+
+
+def test_moe_capacity_drops_overflow():
+    """With capacity_factor << 1 some tokens must drop to zero output —
+    NodePad semantics: dropped tokens produce exactly 0 (no edge)."""
+    cfg = _moe_cfg()
+    tiny = dataclasses.replace(cfg.moe, capacity_factor=0.05, top_k=1)
+    c = dataclasses.replace(cfg, moe=tiny)
+    p = moe_mod.moe_init(KEY, c)
+    # zero the shared path so drops are visible (olmoe has none anyway)
+    x = jax.random.normal(KEY, (1, 64, c.d_model), jnp.float32)
+    y, _ = moe_mod.moe_forward(p, c, x)
+    token_norms = np.asarray(jnp.abs(y[0]).sum(-1))
+    assert (token_norms < 1e-7).sum() > 0      # some tokens dropped
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_moe_router_gates_normalized(seed):
+    cfg = _moe_cfg()
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (32, cfg.moe.num_experts))
+    gates, idx, probs = moe_mod._route(cfg.moe, logits)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
+    assert np.asarray(probs).min() >= 0

@@ -1,0 +1,67 @@
+"""End-to-end behaviour of the paper's system: the full GraNNite pipeline
+(preprocess -> enable -> optimize -> trade accuracy) on a Cora-shaped graph,
+and the technique-stacking used by benchmarks (Fig. 20)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import pad_graph
+from repro.core.layers import Techniques
+from repro.core.models import (GNNConfig, build_operands, calibrate_quant,
+                               evaluate, forward_grannite, init_params,
+                               train_node_classifier)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_full_grannite_pipeline(small_graph):
+    """Train FP32 -> apply full GraNNite stack -> accuracy preserved."""
+    pg = pad_graph(small_graph)
+    cfg = GNNConfig(kind="gcn", in_feats=small_graph.features.shape[1],
+                    num_classes=5)
+    ops_ = build_operands(pg, cfg, grasp=True)
+
+    def fwd_plain(p, x):
+        return forward_grannite(p, cfg, x, ops_, Techniques(stagr=True))
+
+    params = train_node_classifier(KEY, cfg, pg, fwd_plain, epochs=60)
+    acc_fp32 = evaluate(cfg, params, pg, fwd_plain)
+
+    # full stack: StaGr + GraphSplit + GrAd + GraSp + QuantGr
+    x = jnp.asarray(pg.features)
+    ops_q = dataclasses.replace(ops_, quant=calibrate_quant(params, cfg, x, ops_))
+    t_full = Techniques.full_gcn()
+
+    def fwd_full(p, xx):
+        return forward_grannite(p, cfg, xx, ops_q, t_full)
+
+    acc_full = evaluate(cfg, params, pg, fwd_full)
+    assert acc_fp32 > 0.55
+    assert acc_full > acc_fp32 - 0.03      # paper: negligible quality loss
+
+
+def test_every_paper_model_runs_all_techniques(small_graph):
+    pg = pad_graph(small_graph)
+    f = small_graph.features.shape[1]
+    x = jnp.asarray(pg.features)
+    combos = [
+        (GNNConfig(kind="gcn", in_feats=f, num_classes=5),
+         Techniques.full_gcn()),
+        (GNNConfig(kind="gat", in_feats=f, num_classes=5, heads=4),
+         Techniques.full_gat()),
+        (GNNConfig(kind="sage", in_feats=f, num_classes=5, aggregator="mean"),
+         Techniques.full_sage()),
+        (GNNConfig(kind="sage", in_feats=f, num_classes=5, aggregator="max"),
+         Techniques.full_sage()),
+    ]
+    for cfg, t in combos:
+        params = init_params(KEY, cfg)
+        ops_ = build_operands(pg, cfg, grasp=t.grasp)
+        if t.quantgr:
+            ops_ = dataclasses.replace(
+                ops_, quant=calibrate_quant(params, cfg, x, ops_))
+        y = forward_grannite(params, cfg, x, ops_, t)
+        assert y.shape == (pg.capacity, cfg.num_classes)
+        assert bool(jnp.isfinite(y).all()), cfg.kind
