@@ -37,6 +37,7 @@ def main() -> None:
         if not args.quick:
             gnn_paper.accuracy_table(ds)
     gnn_paper.fig22_density_crossover()
+    gnn_paper.serving_throughput()
     lm_subs.ssd_vs_sequential()
     lm_subs.moe_dispatch_paths()
     lm_subs.serving_bucket_reuse()

@@ -11,7 +11,7 @@ the JAX analogue of the paper's "one precompiled blob" (jit cache hit).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -179,6 +179,109 @@ def pad_graph(g: Graph, *, capacity: Optional[int] = None, slack: float = 0.0,
         labels=None if g.labels is None else pad_labels(g.labels, cap),
         train_mask=_pad_bool(g.train_mask),
         test_mask=_pad_bool(g.test_mask),
+    )
+
+
+# ---------------------------------------------------------------------------
+# BucketLadder — the multi-graph NodePad policy (DESIGN.md §3).
+# One compiled blob per (model, bucket); a graph joins the smallest bucket
+# that holds it, and a growing graph re-buckets (the one legitimate
+# recompile) only when it outgrows its current capacity.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLadder:
+    """A sorted set of NodePad capacities shared by many graphs.
+
+    `slack` reserves growth headroom at admission: a graph is placed in the
+    smallest bucket >= num_nodes * (1 + slack), so GrAd updates have room
+    before the re-bucket policy has to move it up the ladder.
+    """
+
+    buckets: Tuple[int, ...] = (256, 512, 1024, 2048)
+    slack: float = 0.0
+
+    def __post_init__(self):
+        bs = tuple(sorted(int(b) for b in self.buckets))
+        if not bs:
+            raise ValueError("BucketLadder needs at least one bucket")
+        for b in bs:
+            if b <= 0 or b % MXU_TILE:
+                raise ValueError(
+                    f"bucket {b} is not a positive multiple of the MXU tile "
+                    f"{MXU_TILE} (NodePad buckets must tile-align)")
+        object.__setattr__(self, "buckets", bs)
+
+    def bucket_for(self, num_nodes: int) -> int:
+        """Smallest bucket holding num_nodes (+ admission slack)."""
+        want = int(np.ceil(num_nodes * (1.0 + self.slack)))
+        for b in self.buckets:
+            if want <= b:
+                return b
+        # slack is headroom, not a hard requirement: a graph that fits the
+        # top bucket without slack is still admissible there.
+        if num_nodes <= self.buckets[-1]:
+            return self.buckets[-1]
+        raise ValueError(
+            f"graph with {num_nodes} nodes exceeds the largest bucket "
+            f"{self.buckets[-1]}")
+
+    def pad(self, g: Graph, *, norm: str = "gcn") -> PaddedGraph:
+        return pad_graph(g, capacity=self.bucket_for(g.num_nodes), norm=norm)
+
+    def grow(self, pg: PaddedGraph, edge_index: np.ndarray, num_nodes: int,
+             features: np.ndarray, *, norm: str = "gcn"
+             ) -> Tuple[PaddedGraph, bool]:
+        """GrAd update with re-bucket policy.
+
+        Returns (updated graph, rebucketed). While the graph fits its
+        current capacity this is a pure value update (zero recompiles); once
+        it outgrows the bucket, the graph is re-padded into the next rung —
+        the caller pays exactly one new (model, bucket) compile, which the
+        serving engine counts as a rebucket event.
+        """
+        if num_nodes <= pg.capacity:
+            upd = update_edges(pg, edge_index, num_nodes, norm=norm)
+            upd = dataclasses.replace(
+                upd, features=pad_features(features, pg.capacity))
+            return upd, False
+        fresh = Graph(edge_index=edge_index, num_nodes=num_nodes,
+                      features=features)
+        cap = self.bucket_for(num_nodes)
+        return pad_graph(fresh, capacity=cap, norm=norm), True
+
+
+@dataclasses.dataclass
+class BatchedGraphs:
+    """Same-bucket PaddedGraphs stacked with a leading batch dimension."""
+
+    capacity: int
+    num_nodes: np.ndarray     # (B,) int32
+    features: np.ndarray      # (B, cap, F)
+    norm_adj: np.ndarray      # (B, cap, cap)
+    adj: np.ndarray           # (B, cap, cap)
+    node_mask: np.ndarray     # (B, cap)
+
+    @property
+    def batch(self) -> int:
+        return int(self.features.shape[0])
+
+
+def stack_padded(pgs: Sequence[PaddedGraph]) -> BatchedGraphs:
+    """Stack PaddedGraphs of one bucket for vmapped batched execution."""
+    if not pgs:
+        raise ValueError("cannot stack an empty graph batch")
+    caps = {pg.capacity for pg in pgs}
+    if len(caps) != 1:
+        raise ValueError(f"mixed NodePad buckets in one batch: {sorted(caps)}")
+    return BatchedGraphs(
+        capacity=pgs[0].capacity,
+        num_nodes=np.asarray([pg.num_nodes for pg in pgs], np.int32),
+        features=np.stack([pg.features for pg in pgs]),
+        norm_adj=np.stack([pg.norm_adj for pg in pgs]),
+        adj=np.stack([pg.adj for pg in pgs]),
+        node_mask=np.stack([pg.node_mask for pg in pgs]),
     )
 
 

@@ -9,7 +9,7 @@ different models.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -78,7 +78,9 @@ class GranniteOperands:
     """Host-precomputed (GraphSplit/PreG/StaGr) dense operands.
 
     For GrAd these are *arguments*; for StaGr-static callers may close over
-    them. Building this object is the 'CPU side' of GraphSplit.
+    them. Building this object is the 'CPU side' of GraphSplit. Registered as
+    a jax pytree so a whole operand set crosses jit/vmap boundaries as one
+    runtime input (the plan/executor split, DESIGN.md §2).
     """
     norm_adj: jnp.ndarray                 # (cap, cap) PreG-normalized
     mask_mult: jnp.ndarray                # GAT exact multiplicative mask
@@ -89,18 +91,68 @@ class GranniteOperands:
     quant: Optional[Dict[str, QuantizedLinear]] = None  # QuantGr layers
 
 
+jax.tree_util.register_pytree_node(
+    GranniteOperands,
+    lambda o: ((o.norm_adj, o.mask_mult, o.bias_add, o.sample_mask,
+                o.mean_mask, o.block_sparse, o.quant), None),
+    lambda _, c: GranniteOperands(*c))
+
+
+# Which operand fields each model kind actually reads; the rest may be
+# placeholder zeros when operands are built per-request (lean=True).
+OPERAND_FIELDS = {
+    "gcn": ("norm_adj",),
+    "gat": ("mask_mult", "bias_add"),
+    "sage": ("sample_mask", "mean_mask"),
+}
+
+
 def build_operands(pg: PaddedGraph, cfg: GNNConfig, *, grasp: bool = False,
-                   rng: Optional[np.random.Generator] = None) -> GranniteOperands:
-    awl = masks.adj_with_self_loops(pg.adj, pg.num_nodes)
-    sample = masks.sage_sample_adjacency(pg.adj, pg.num_nodes,
-                                         max_neighbors=cfg.max_neighbors, rng=rng)
+                   rng: Optional[np.random.Generator] = None,
+                   lean: bool = False) -> GranniteOperands:
+    """Host side of GraphSplit: all dense operands for one padded graph.
+
+    lean=True builds only the fields `cfg.kind` consumes (OPERAND_FIELDS) and
+    fills the rest with (1, 1) placeholders — the serving engine builds
+    operands per request, where the unused (cap, cap) masks would dominate
+    host time and memory. Placeholders are safe through jit/vmap because the
+    forward for that kind never touches them.
+    """
+    fields = OPERAND_FIELDS[cfg.kind] if lean else (
+        "norm_adj", "mask_mult", "bias_add", "sample_mask", "mean_mask")
+    hole = jnp.zeros((1, 1), jnp.float32)
+    vals = {k: hole for k in ("norm_adj", "mask_mult", "bias_add",
+                              "sample_mask", "mean_mask")}
+    if "norm_adj" in fields:
+        vals["norm_adj"] = jnp.asarray(pg.norm_adj)
+    if "mask_mult" in fields or "bias_add" in fields:
+        awl = masks.adj_with_self_loops(pg.adj, pg.num_nodes)
+        vals["mask_mult"] = jnp.asarray(masks.attention_bias_multiplicative(awl))
+        vals["bias_add"] = jnp.asarray(masks.attention_bias_additive(awl))
+    if "sample_mask" in fields or "mean_mask" in fields:
+        sample = masks.sage_sample_adjacency(
+            pg.adj, pg.num_nodes, max_neighbors=cfg.max_neighbors, rng=rng)
+        vals["sample_mask"] = jnp.asarray(sample)
+        vals["mean_mask"] = jnp.asarray(masks.mean_from_mask(sample))
     return GranniteOperands(
-        norm_adj=jnp.asarray(pg.norm_adj),
-        mask_mult=jnp.asarray(masks.attention_bias_multiplicative(awl)),
-        bias_add=jnp.asarray(masks.attention_bias_additive(awl)),
-        sample_mask=jnp.asarray(sample),
-        mean_mask=jnp.asarray(masks.mean_from_mask(sample)),
-        block_sparse=to_block_sparse(pg.norm_adj) if grasp else None,
+        block_sparse=to_block_sparse(pg.norm_adj) if grasp else None, **vals)
+
+
+def stack_operands(ops: Sequence[GranniteOperands]) -> GranniteOperands:
+    """Stack per-graph operands into one batched (B, ...) operand set.
+
+    Batched plans execute vmapped, so every field gains a leading batch dim.
+    GraSp / QuantGr operands are per-graph compile-time structures and have
+    no batched form — the engine runs those single-graph.
+    """
+    if any(o.block_sparse is not None or o.quant is not None for o in ops):
+        raise ValueError("block_sparse/quant operands cannot be batched")
+    return GranniteOperands(
+        norm_adj=jnp.stack([o.norm_adj for o in ops]),
+        mask_mult=jnp.stack([o.mask_mult for o in ops]),
+        bias_add=jnp.stack([o.bias_add for o in ops]),
+        sample_mask=jnp.stack([o.sample_mask for o in ops]),
+        mean_mask=jnp.stack([o.mean_mask for o in ops]),
     )
 
 
@@ -146,6 +198,67 @@ def forward_grannite(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
         return layers.sage_grannite(params["l2"], h, ops_.sample_mask,
                                     ops_.mean_mask, t, aggregator=cfg.aggregator)
     raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Plan / executor split (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+PlanKey = Tuple[GNNConfig, int, int, Techniques]   # (cfg, capacity, batch, t)
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """One compiled execution recipe: (model kind, NodePad bucket, Techniques).
+
+    The plan owns the jitted callable; operands are *runtime arguments*
+    (GrAd discipline), so every graph that lands in the same bucket reuses
+    the same compiled blob — callers never rebuild traces ad hoc. With
+    batch_size > 0 the forward is vmapped over a leading batch dim of both
+    features and operands (params broadcast), which is how GraphServe turns
+    many small irregular graphs into one dense statically-shaped dispatch.
+
+    `trace_count` counts actual jit traces (not cache-key entries), so the
+    zero-recompile contract is asserted against the compiler, not our own
+    bookkeeping. Params are runtime arguments (never closed over), so `key`
+    is the full identity of the compiled blob: models sharing (cfg,
+    capacity, batch, techniques) can legitimately share one plan.
+    """
+    cfg: GNNConfig
+    techniques: Techniques
+    capacity: int
+    batch_size: int = 0                       # 0 = single-graph plan
+    fn: Callable = dataclasses.field(default=None, repr=False)
+    trace_count: int = 0
+
+    @property
+    def key(self) -> PlanKey:
+        return (self.cfg, self.capacity, self.batch_size, self.techniques)
+
+    def __call__(self, params: Dict, x: jnp.ndarray,
+                 ops_: GranniteOperands) -> jnp.ndarray:
+        return self.fn(params, x, ops_)
+
+
+def build_plan(cfg: GNNConfig, capacity: int, t: Techniques, *,
+               batch_size: int = 0) -> ExecutionPlan:
+    """Compile-on-first-call plan for (cfg.kind, capacity, t).
+
+    batch_size > 0 builds the batched executor: x is (B, cap, F) and every
+    operand field carries a leading B dim (see stack_operands).
+    """
+    plan = ExecutionPlan(cfg=cfg, techniques=t, capacity=capacity,
+                         batch_size=batch_size)
+
+    def _forward(params, x, ops_):
+        plan.trace_count += 1                 # python side effect: traces only
+        return forward_grannite(params, cfg, x, ops_, t)
+
+    if batch_size > 0:
+        plan.fn = jax.jit(jax.vmap(_forward, in_axes=(None, 0, 0)))
+    else:
+        plan.fn = jax.jit(_forward)
+    return plan
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,188 @@
+"""Logical-axis -> mesh-axis distribution rules.
+
+Every parameter in the LM substrate carries *logical* axis names
+(`repro.nn.common.Param`); this module maps them onto physical mesh axes.
+The mapping is rule-based and divisibility-checked: a dimension is sharded
+over a mesh axis only when (a) a rule names that axis, (b) the axis exists
+in the mesh, and (c) the dimension is divisible by the axis size — otherwise
+the dimension falls back to replication. That fallback is what lets the same
+model definition run unchanged on 1 CPU device, a (16, 16) single pod, or a
+(2, 16, 16) multi-pod mesh (the NodePad philosophy — one artifact, many
+deployments — applied to distribution).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.nn.common import Param
+
+# Tensor-parallel ("model") axes: wide output-ish dimensions whose matmul
+# partials reduce over the fast inner ICI dimension. Everything else is
+# replicated; batch dims shard over the data axes ("pod" outer, "data" inner).
+AXIS_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "ff": "model",
+    "mlp": "model",
+    "heads": "model",
+    "ssm_in": "model",
+    "ssm_heads": "model",
+    "embed": None,       # contracted in every matmul: replicate
+    "kv": None,          # small KV head counts rarely divide; replicate
+    "frames": None,
+}
+
+# Expert parallelism is placement-dependent (capacity vs bandwidth); the
+# dry-run picks per-(arch, mesh) via choose_expert_axis and pins it here.
+_EXPERT_AXIS: Optional[str] = "model"
+
+
+def set_expert_axis(name: Optional[str]) -> None:
+    global _EXPERT_AXIS
+    _EXPERT_AXIS = name
+
+
+def choose_expert_axis(cfg, mesh) -> Optional[str]:
+    """Prefer the model axis; fall back to data when expert count divides it
+    better (small-expert archs on wide model axes)."""
+    n = int(getattr(cfg, "num_experts", 0) or 0)
+    for axis in ("model", "data"):
+        if axis in mesh.shape and n > 0 and n % mesh.shape[axis] == 0:
+            return axis
+    return "model"
+
+
+def _mesh_axis_for(logical: Optional[str]) -> Optional[str]:
+    if logical == "experts":
+        return _EXPERT_AXIS
+    return AXIS_RULES.get(logical) if logical else None
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                  mesh) -> P:
+    """PartitionSpec for one tensor; indivisible dims replicate (fallback)."""
+    entries = []
+    used = set()
+    for dim, logical in zip(shape, axes):
+        a = _mesh_axis_for(logical)
+        if (a is None or a not in mesh.shape or a in used
+                or dim % mesh.shape[a] != 0):
+            entries.append(None)
+        else:
+            entries.append(a)
+            used.add(a)
+    return P(*entries)
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def param_specs(params, mesh):
+    """Param tree -> PartitionSpec tree (same structure, one spec per Param)."""
+    return jax.tree_util.tree_map(
+        lambda p: spec_for_axes(p.axes, p.value.shape, mesh),
+        params, is_leaf=_is_param)
+
+
+def param_shardings(params, mesh):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, spec_for_axes(p.axes, p.value.shape, mesh)),
+        params, is_leaf=_is_param)
+
+
+def optimizer_shardings(params, mesh):
+    """Adam moments mirror the parameter layout exactly."""
+    return param_shardings(params, mesh)
+
+
+def scalar_sharding(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation shardings
+# ---------------------------------------------------------------------------
+
+def mesh_batch_axes(mesh) -> Tuple[str, ...]:
+    """Data-parallel axes present in this mesh, outermost first."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _data_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh_batch_axes(mesh)] or [1]))
+
+
+def batch_spec(mesh, *, ndim: int) -> P:
+    axes = mesh_batch_axes(mesh)
+    lead = axes if axes else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def batch_shardings(batch, mesh):
+    """Shard dim 0 of every batch leaf over the data axes (when divisible)."""
+    n = _data_size(mesh)
+
+    def one(leaf):
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] % n == 0:
+            return NamedSharding(mesh, batch_spec(mesh, ndim=leaf.ndim))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_specs(tree, mesh, *, seq_sharded: bool = False):
+    """Decode-cache PartitionSpecs: batch dim over the data axes.
+
+    When the global batch cannot fill the data axes (seq_sharded), the cache
+    replicates — correctness first; the dry-run reports the idle fraction.
+    """
+    n = _data_size(mesh)
+
+    def one(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim >= 1 and not seq_sharded and leaf.shape[0] % n == 0:
+            return batch_spec(mesh, ndim=ndim)
+        return P()
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Inside-jit constraints
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH = None
+
+
+@contextlib.contextmanager
+def use_distribution(mesh):
+    """Activate a mesh so in-trace sharding constraints resolve against it."""
+    global _ACTIVE_MESH
+    prev, _ACTIVE_MESH = _ACTIVE_MESH, mesh
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def constrain_scan_slices(y: Any) -> Any:
+    """Keep the per-microbatch batch dim data-sharded across scan slices.
+
+    `y` is (n_micro, batch/n_micro, ...) — without the constraint XLA is free
+    to gather the whole microbatch stack onto one replica between scan
+    iterations. No-op outside a `use_distribution` mesh (single-device tests).
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return y
+    axes = mesh_batch_axes(mesh)
+    n = _data_size(mesh)
+    if not axes or getattr(y, "ndim", 0) < 2 or y.shape[1] % n != 0:
+        return y
+    spec = P(None, axes, *([None] * (y.ndim - 2)))
+    return jax.lax.with_sharding_constraint(y, NamedSharding(mesh, spec))

@@ -1,1 +1,1 @@
-from . import trainer, server  # noqa: F401
+from . import gnn_server, server, trainer  # noqa: F401

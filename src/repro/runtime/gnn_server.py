@@ -1,0 +1,246 @@
+"""GraphServe: a multi-graph, multi-bucket GNN inference engine.
+
+The LM server (`runtime/server.py`) turns the paper's Step-1 techniques into
+a serving discipline for token streams; GraphServe does the same for streams
+of *graphs* — the paper's actual workload:
+
+  * NodePad / BucketLadder — every request's graph is padded into one rung
+    of a shared bucket ladder (tile-aligned capacities, e.g. 256/512/1024/
+    2048), so the engine holds exactly one compiled blob per
+    (model kind, bucket) after warmup, independent of request shapes.
+  * GrAd — adjacency operands are runtime *arguments* of an ExecutionPlan
+    (`core.models.build_plan`), never baked constants: evolving graphs
+    re-run host preprocessing only. A graph that outgrows its bucket moves
+    up the ladder (`BucketLadder.grow`) — the one legitimate recompile,
+    surfaced as a `rebucket_events` metric.
+  * GraphSplit — padding, PreG normalization, and mask construction happen
+    on the host at submit/update time; the device executes one dense,
+    statically-shaped, vmapped forward per batch.
+  * Batching — same-bucket requests are stacked with a leading batch dim
+    (`core.models.stack_operands`) and executed through the plan's vmapped
+    callable at a FIXED batch width; partial batches repeat a real request
+    into the junk slots (dropped on output) so batch width never changes
+    shape — the same trick as the LM server's empty decode slots.
+
+Zero-recompile contract: after `warmup()`, `assert_warm()` holds however
+many mixed-size requests arrive, as long as no graph climbs the ladder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import (BucketLadder, Graph, PaddedGraph, pad_graph,
+                              stack_padded)
+from repro.core.layers import Techniques
+from repro.core.models import (ExecutionPlan, GNNConfig, GranniteOperands,
+                               PlanKey, build_operands, build_plan,
+                               init_params, stack_operands)
+
+# Per-kind serving techniques: the full dense-path stacks minus GraSp /
+# QuantGr, whose operands are per-graph compile-time structures with no
+# batched (vmapped) form — see stack_operands.
+DEFAULT_TECHNIQUES: Dict[str, Techniques] = {
+    "gcn": Techniques(stagr=True, grad_dynamic=True, graphsplit=True),
+    "gat": Techniques.full_gat(),
+    "sage": Techniques.full_sage(),
+}
+
+
+@dataclasses.dataclass
+class GNNRequest:
+    uid: int
+    model: str
+    pg: PaddedGraph
+    ops: GranniteOperands
+    bucket: int
+    submitted_s: float
+    finished_s: float = 0.0
+    done: bool = False
+    preds: Optional[np.ndarray] = None     # (num_nodes,) argmax classes
+    logits: Optional[np.ndarray] = None    # (num_nodes, C) if return_logits
+
+
+@dataclasses.dataclass
+class GraphServeConfig:
+    ladder: BucketLadder = dataclasses.field(default_factory=BucketLadder)
+    batch_slots: int = 4                   # fixed batch width per dispatch
+    return_logits: bool = False
+
+
+@dataclasses.dataclass
+class _ModelEntry:
+    cfg: GNNConfig
+    params: Dict
+    techniques: Techniques
+
+
+class GraphServe:
+    def __init__(self, sc: Optional[GraphServeConfig] = None, *, seed: int = 0):
+        self.sc = sc or GraphServeConfig()
+        self.seed = seed
+        self.models: Dict[str, _ModelEntry] = {}
+        self.queue: List[GNNRequest] = []
+        self.finished: List[GNNRequest] = []
+        self.graphs: Dict[int, Tuple[str, PaddedGraph]] = {}
+        self._plans: Dict[PlanKey, ExecutionPlan] = {}
+        self._warm_blobs: Optional[int] = None
+        self._uid = 0
+        self._gid = 0
+        self.metrics = {"batches": 0, "slots_filled": 0, "slots_total": 0,
+                        "rebucket_events": 0, "latency_s": [],
+                        "first_submit_s": None, "last_finish_s": None}
+
+    # ------------------------------------------------------------------ setup
+    def register_model(self, name: str, cfg: GNNConfig, params: Optional[Dict] = None,
+                       *, techniques: Optional[Techniques] = None) -> None:
+        import jax
+        if params is None:
+            params = init_params(jax.random.PRNGKey(self.seed), cfg)
+        t = techniques if techniques is not None else DEFAULT_TECHNIQUES[cfg.kind]
+        self.models[name] = _ModelEntry(cfg=cfg, params=params, techniques=t)
+
+    def plan_for(self, model: str, bucket: int) -> ExecutionPlan:
+        # keyed by the plan's full identity, not the model name: params are
+        # runtime args, so models registered with identical (cfg, techniques)
+        # share one compiled blob per bucket
+        e = self.models[model]
+        key: PlanKey = (e.cfg, bucket, self.sc.batch_slots, e.techniques)
+        if key not in self._plans:
+            self._plans[key] = build_plan(e.cfg, bucket, e.techniques,
+                                          batch_size=self.sc.batch_slots)
+        return self._plans[key]
+
+    @property
+    def compiled_blobs(self) -> int:
+        """Actual jit traces across all plans (the compiler's own count)."""
+        return sum(p.trace_count for p in self._plans.values())
+
+    def warmup(self, *, buckets: Optional[Tuple[int, ...]] = None) -> int:
+        """Compile every (model, bucket) plan once with placeholder inputs."""
+        buckets = buckets if buckets is not None else self.sc.ladder.buckets
+        b = self.sc.batch_slots
+        for bucket in buckets:
+            empty = pad_graph(Graph(edge_index=np.zeros((2, 0), np.int32),
+                                    num_nodes=1,
+                                    features=np.zeros((1, 1), np.float32)),
+                              capacity=bucket)
+            for name, e in self.models.items():
+                pg = dataclasses.replace(
+                    empty, features=np.zeros((bucket, e.cfg.in_feats),
+                                             np.float32))
+                ops = stack_operands(
+                    [build_operands(pg, e.cfg, lean=True)] * b)
+                x = jnp.zeros((b, bucket, e.cfg.in_feats), jnp.float32)
+                out = self.plan_for(name, bucket)(e.params, x, ops)
+                out.block_until_ready()
+        self._warm_blobs = self.compiled_blobs
+        return self._warm_blobs
+
+    def assert_warm(self) -> None:
+        """The zero-recompile contract (mirrors the LM server's assertion)."""
+        assert self._warm_blobs is not None, "call warmup() first"
+        assert self.compiled_blobs == self._warm_blobs, (
+            f"recompile after warmup: {self.compiled_blobs} traces vs "
+            f"{self._warm_blobs} at warmup")
+
+    # ------------------------------------------------------------------ intake
+    def _enqueue(self, model: str, pg: PaddedGraph) -> int:
+        e = self.models[model]
+        now = time.perf_counter()
+        req = GNNRequest(uid=self._uid, model=model, pg=pg,
+                         ops=build_operands(pg, e.cfg, lean=True),
+                         bucket=pg.capacity, submitted_s=now)
+        self._uid += 1
+        if self.metrics["first_submit_s"] is None:
+            self.metrics["first_submit_s"] = now
+        self.queue.append(req)
+        return req.uid
+
+    def submit(self, g: Graph, *, model: str) -> int:
+        """One-shot inference request over a static graph."""
+        return self._enqueue(model, self.sc.ladder.pad(g))
+
+    def attach(self, g: Graph, *, model: str) -> int:
+        """Register an evolving graph; returns a graph_id for update/query."""
+        gid = self._gid
+        self._gid += 1
+        self.graphs[gid] = (model, self.sc.ladder.pad(g))
+        return gid
+
+    def update(self, graph_id: int, edge_index: np.ndarray, num_nodes: int,
+               features: np.ndarray) -> bool:
+        """GrAd update of an attached graph; True if it climbed the ladder."""
+        model, pg = self.graphs[graph_id]
+        pg, rebucketed = self.sc.ladder.grow(pg, edge_index, num_nodes,
+                                             features)
+        self.graphs[graph_id] = (model, pg)
+        if rebucketed:
+            self.metrics["rebucket_events"] += 1
+        return rebucketed
+
+    def query(self, graph_id: int) -> int:
+        """Enqueue inference over an attached graph's current snapshot."""
+        model, pg = self.graphs[graph_id]
+        return self._enqueue(model, pg)
+
+    # --------------------------------------------------------------- execution
+    def run(self) -> List[GNNRequest]:
+        while self.queue:
+            self._run_batch()
+        return self.finished
+
+    def _run_batch(self) -> None:
+        head = self.queue[0]
+        key = (head.model, head.bucket)
+        batch = [r for r in self.queue
+                 if (r.model, r.bucket) == key][: self.sc.batch_slots]
+        taken = {r.uid for r in batch}
+        self.queue = [r for r in self.queue if r.uid not in taken]
+
+        b = self.sc.batch_slots
+        # fixed batch width: junk slots repeat a real request, outputs dropped
+        slots = batch + [batch[-1]] * (b - len(batch))
+        e = self.models[head.model]
+        x = jnp.asarray(stack_padded([r.pg for r in slots]).features)
+        ops = stack_operands([r.ops for r in slots])
+        logits = self.plan_for(head.model, head.bucket)(e.params, x, ops)
+        logits.block_until_ready()
+
+        now = time.perf_counter()
+        host_logits = np.asarray(logits)
+        for i, r in enumerate(batch):
+            lg = host_logits[i, : r.pg.num_nodes]
+            r.preds = lg.argmax(axis=-1).astype(np.int32)
+            if self.sc.return_logits:
+                r.logits = lg
+            r.done = True
+            r.finished_s = now
+            self.metrics["latency_s"].append(now - r.submitted_s)
+            self.finished.append(r)
+        self.metrics["batches"] += 1
+        self.metrics["slots_filled"] += len(batch)
+        self.metrics["slots_total"] += b
+        self.metrics["last_finish_s"] = now
+
+    # ---------------------------------------------------------------- metrics
+    def summary(self) -> Dict[str, object]:
+        lat = np.asarray(self.metrics["latency_s"], np.float64)
+        t0, t1 = self.metrics["first_submit_s"], self.metrics["last_finish_s"]
+        span = (t1 - t0) if (t0 is not None and t1 is not None) else 0.0
+        return {
+            "requests": len(self.finished),
+            "compiled_blobs": self.compiled_blobs,
+            "batches": self.metrics["batches"],
+            "batch_occupancy": (self.metrics["slots_filled"]
+                                / max(self.metrics["slots_total"], 1)),
+            "rebucket_events": self.metrics["rebucket_events"],
+            "throughput_rps": (len(self.finished) / span if span > 0 else 0.0),
+            "p50_latency_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
+            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
+            "mean_latency_s": float(lat.mean()) if lat.size else 0.0,
+        }

@@ -97,8 +97,13 @@ def make_train_step(cfg: ArchConfig, tc: TrainConfig,
                 params, batch)
 
         grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+        # Degenerate configs (warmup >= total steps, e.g. smoke runs that
+        # shrink steps but keep the default warmup) would otherwise spend the
+        # whole run inside the ramp; explicit sane warmups are untouched.
+        warmup = (tc.warmup_steps if tc.warmup_steps < tc.steps
+                  else max(1, tc.steps // 4))
         lr = linear_warmup_cosine(step, base_lr=tc.lr,
-                                  warmup_steps=tc.warmup_steps,
+                                  warmup_steps=warmup,
                                   total_steps=tc.steps)
         new_params, new_opt = adamw_update(params, grads, opt, lr=lr,
                                            weight_decay=tc.weight_decay)

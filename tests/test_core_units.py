@@ -1,7 +1,9 @@
 """Unit + hypothesis property tests for the GraNNite core substrates."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import effop, masks
 from repro.core.graph import (dense_adjacency, gcn_norm_adjacency,

@@ -96,6 +96,10 @@ def test_compressed_psum_subprocess():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.dist.compress import compressed_psum_mean, exact_psum_mean
+        try:
+            shard_map = jax.shard_map
+        except AttributeError:   # pre-0.5 jax: experimental namespace
+            from jax.experimental.shard_map import shard_map
         mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 32))
 
@@ -105,8 +109,8 @@ def test_compressed_psum_subprocess():
             exact = exact_psum_mean(g, ("data",))
             return mean[None], exact[None], resid[None]
 
-        f = jax.shard_map(body, mesh=mesh, in_specs=(P("data"),),
-                          out_specs=(P("data"), P("data"), P("data")))
+        f = shard_map(body, mesh=mesh, in_specs=(P("data"),),
+                      out_specs=(P("data"), P("data"), P("data")))
         mean, exact, resid = f(x)
         mean, exact = np.asarray(mean[0]), np.asarray(exact[0])
         scale = np.abs(x).max() / 127.0
