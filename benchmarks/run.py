@@ -1,9 +1,12 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--dataset cora]
+                                          [--bench-json BENCH_gnn.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record) and
-writes benchmarks/results.json. The roofline report (§Roofline) is generated
+writes benchmarks/results.json. ``--bench-json`` additionally writes the
+serving-throughput + CacheG operand-bytes rows to a standalone file (CI
+commits none of it, but the artifact tracks the perf trajectory per PR). The roofline report (§Roofline) is generated
 separately by launch/dryrun.py (needs the 512-device placeholder env).
 """
 from __future__ import annotations
@@ -21,6 +24,10 @@ def main() -> None:
                     choices=["cora", "citeseer", "both"])
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "results.json"))
+    ap.add_argument("--bench-json", default=None, metavar="BENCH_gnn.json",
+                    help="also write the serving-throughput and CacheG "
+                         "operand-bytes rows to this path (repo-root "
+                         "BENCH_gnn.json in CI) for perf-trajectory tracking")
     args = ap.parse_args()
 
     from . import gnn_paper, lm_subs
@@ -38,6 +45,10 @@ def main() -> None:
             gnn_paper.accuracy_table(ds)
     gnn_paper.fig22_density_crossover()
     gnn_paper.serving_throughput()
+    # --quick drops to a 1024 rung so CI stays fast; the full run exercises
+    # the paper-scale cap-2048 GAT case (2 x 16 MB eager masks per query)
+    gnn_paper.operand_pipeline(cap=1024 if args.quick else 2048,
+                               n_queries=4 if args.quick else 6)
     lm_subs.ssd_vs_sequential()
     lm_subs.moe_dispatch_paths()
     lm_subs.serving_bucket_reuse()
@@ -45,6 +56,13 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(ROWS, f, indent=1)
     print(f"# wrote {len(ROWS)} rows -> {args.out}")
+
+    if args.bench_json:
+        perf = [r for r in ROWS
+                if r["name"].startswith(("serve/", "operand_pipeline/"))]
+        with open(args.bench_json, "w") as f:
+            json.dump({"rows": perf}, f, indent=1)
+        print(f"# wrote {len(perf)} perf rows -> {args.bench_json}")
 
 
 if __name__ == "__main__":

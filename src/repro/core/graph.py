@@ -34,14 +34,24 @@ class Graph:
         return int(self.edge_index.shape[1])
 
 
-def node_bucket(num_nodes: int, *, tile: int = MXU_TILE, slack: float = 0.0) -> int:
-    """NodePad bucket: smallest tile multiple >= num_nodes*(1+slack).
+def required_capacity(num_nodes: int, slack: float = 0.0) -> int:
+    """Single owner of the NodePad admission rule: nodes * (1 + slack).
 
     `slack` reserves headroom for dynamic node insertion (GrAd) without a
-    recompile — the paper pads Cora 2708 -> 3000; we pad to tile multiples so
-    the same capacity also satisfies the Pallas kernel grids.
+    recompile — the paper pads Cora 2708 -> 3000. Both the free-form
+    `node_bucket` and the ladder's `bucket_for` round THIS number up, so the
+    slack policy cannot drift between the two call sites.
     """
-    want = int(np.ceil(num_nodes * (1.0 + slack)))
+    return int(np.ceil(num_nodes * (1.0 + slack)))
+
+
+def node_bucket(num_nodes: int, *, tile: int = MXU_TILE, slack: float = 0.0) -> int:
+    """NodePad bucket: smallest tile multiple >= required_capacity.
+
+    We pad to tile multiples so the same capacity also satisfies the Pallas
+    kernel grids.
+    """
+    want = required_capacity(num_nodes, slack)
     return int(-(-want // tile) * tile)
 
 
@@ -110,6 +120,44 @@ def symg_unpack(packed: np.ndarray, n: int) -> np.ndarray:
     out[iu] = packed
     out = out + np.triu(out, k=1).T
     return out
+
+
+# ---------------------------------------------------------------------------
+# CacheG compact transfer format (DESIGN.md §7): a 0/1 adjacency crosses the
+# host→device link as PACKED BITS, not float32 — 32× fewer bytes, 64× when
+# the graph is undirected and SymG keeps only the upper triangle. The dense
+# operands are re-derived on device (core.models.materialize_operands).
+# ---------------------------------------------------------------------------
+
+
+def triangular_nbits(n: int) -> int:
+    """Bits in the upper triangle (incl. diagonal) of an (n, n) matrix."""
+    return n * (n + 1) // 2
+
+
+def is_symmetric_adjacency(adj: np.ndarray) -> bool:
+    """True when the 0/1 adjacency is undirected (SymG-packable)."""
+    return bool(np.array_equal(adj, adj.T))
+
+
+def pack_adjacency_bits(adj: np.ndarray) -> np.ndarray:
+    """Bit-pack a full 0/1 (cap, cap) adjacency row-major -> (cap²/8,) uint8."""
+    return np.packbits((adj > 0).reshape(-1))
+
+
+def symg_pack_adjacency_bits(adj: np.ndarray, *, check: bool = True
+                             ) -> np.ndarray:
+    """SymG + bit-pack: upper triangle (incl. diag) of an undirected 0/1
+    adjacency -> (cap(cap+1)/2 / 8,) uint8. Raises on a directed matrix —
+    callers fall back to `pack_adjacency_bits` (or the eager dense path).
+    `check=False` skips the O(cap²) validation when the caller already ran
+    `is_symmetric_adjacency` on this matrix.
+    """
+    if check and not is_symmetric_adjacency(adj):
+        raise ValueError("symg_pack_adjacency_bits requires an undirected "
+                         "(symmetric) adjacency")
+    iu = np.triu_indices(adj.shape[0])
+    return np.packbits((adj[iu] > 0))
 
 
 def pad_features(x: np.ndarray, capacity: int) -> np.ndarray:
@@ -215,7 +263,7 @@ class BucketLadder:
 
     def bucket_for(self, num_nodes: int) -> int:
         """Smallest bucket holding num_nodes (+ admission slack)."""
-        want = int(np.ceil(num_nodes * (1.0 + self.slack)))
+        want = required_capacity(num_nodes, self.slack)
         for b in self.buckets:
             if want <= b:
                 return b
@@ -246,8 +294,24 @@ class BucketLadder:
             upd = dataclasses.replace(
                 upd, features=pad_features(features, pg.capacity))
             return upd, False
+        # Re-bucket: carry the supervision arrays across the move. Nodes
+        # beyond the old capacity are new and unlabeled (fill -1 / False) —
+        # silently dropping labels/train_mask/test_mask here would strand an
+        # attached graph's evaluation state the first time it climbs.
+        old = pg.capacity
+
+        def _grown(arr, fill, dtype):
+            if arr is None:
+                return None
+            out = np.full((num_nodes,), fill, dtype=dtype)
+            out[:old] = arr[:old]
+            return out
+
         fresh = Graph(edge_index=edge_index, num_nodes=num_nodes,
-                      features=features)
+                      features=features,
+                      labels=_grown(pg.labels, -1, np.int32),
+                      train_mask=_grown(pg.train_mask, False, bool),
+                      test_mask=_grown(pg.test_mask, False, bool))
         cap = self.bucket_for(num_nodes)
         return pad_graph(fresh, capacity=cap, norm=norm), True
 

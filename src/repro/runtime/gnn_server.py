@@ -21,9 +21,20 @@ of *graphs* — the paper's actual workload:
     callable at a FIXED batch width; partial batches repeat a real request
     into the junk slots (dropped on output) so batch width never changes
     shape — the same trick as the LM server's empty decode slots.
+  * CacheG (DESIGN.md §7) — operands cross the host→device link as a
+    bit-packed compact form (SymG triangular for undirected graphs) and are
+    expanded to the dense float32 set ON DEVICE by a jitted materializer;
+    attached graphs cache the materialized result per
+    (graph_id, structure_version), so repeated queries of an unchanged
+    graph move ZERO operand bytes and `_run_batch` stacks device-resident
+    buffers. `update()` bumps the version and re-materializes once.
+    Directed GCN/GAT graphs fall back to the eager dense upload (counted as
+    `cacheg_fallbacks`) — same plans, no extra traces.
 
 Zero-recompile contract: after `warmup()`, `assert_warm()` holds however
 many mixed-size requests arrive, as long as no graph climbs the ladder.
+The materializer's jit traces (one per bucket × operand-fieldset, all
+compiled in `warmup()`) are folded into the same contract.
 """
 from __future__ import annotations
 
@@ -34,12 +45,14 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import (BucketLadder, Graph, PaddedGraph, pad_graph,
+from repro.core.graph import (BucketLadder, Graph, PaddedGraph,
+                              is_symmetric_adjacency, pad_graph,
                               stack_padded)
 from repro.core.layers import Techniques
 from repro.core.models import (ExecutionPlan, GNNConfig, GranniteOperands,
-                               PlanKey, build_operands, build_plan,
-                               init_params, stack_operands)
+                               PlanKey, build_materializer, build_operands,
+                               build_plan, compact_operands, init_params,
+                               operand_nbytes, stack_operands)
 
 # Per-kind serving techniques: the full dense-path stacks minus GraSp /
 # QuantGr, whose operands are per-graph compile-time structures with no
@@ -70,6 +83,8 @@ class GraphServeConfig:
     ladder: BucketLadder = dataclasses.field(default_factory=BucketLadder)
     batch_slots: int = 4                   # fixed batch width per dispatch
     return_logits: bool = False
+    use_cacheg: bool = True                # CacheG operand pipeline (§7);
+    # False = eager host-built dense operands uploaded per request
 
 
 @dataclasses.dataclass
@@ -88,12 +103,20 @@ class GraphServe:
         self.finished: List[GNNRequest] = []
         self.graphs: Dict[int, Tuple[str, PaddedGraph]] = {}
         self._plans: Dict[PlanKey, ExecutionPlan] = {}
+        self._materializer = build_materializer()
+        # CacheG device-resident operand cache: (graph_id, structure_version)
+        # -> materialized GranniteOperands living in device memory. update()
+        # bumps the version and evicts, so stale structure can never serve.
+        self._operand_cache: Dict[Tuple[int, int], GranniteOperands] = {}
+        self._graph_version: Dict[int, int] = {}
         self._warm_blobs: Optional[int] = None
         self._uid = 0
         self._gid = 0
         self.metrics = {"batches": 0, "slots_filled": 0, "slots_total": 0,
                         "rebucket_events": 0, "latency_s": [],
-                        "first_submit_s": None, "last_finish_s": None}
+                        "first_submit_s": None, "last_finish_s": None,
+                        "operand_bytes_h2d": 0, "operand_cache_hits": 0,
+                        "operand_cache_misses": 0, "cacheg_fallbacks": 0}
 
     # ------------------------------------------------------------------ setup
     def register_model(self, name: str, cfg: GNNConfig, params: Optional[Dict] = None,
@@ -117,11 +140,15 @@ class GraphServe:
 
     @property
     def compiled_blobs(self) -> int:
-        """Actual jit traces across all plans (the compiler's own count)."""
-        return sum(p.trace_count for p in self._plans.values())
+        """Actual jit traces: all plans + the CacheG materializer (one trace
+        per bucket × operand-fieldset, compiled during warmup)."""
+        return (sum(p.trace_count for p in self._plans.values())
+                + self._materializer.trace_count)
 
     def warmup(self, *, buckets: Optional[Tuple[int, ...]] = None) -> int:
-        """Compile every (model, bucket) plan once with placeholder inputs."""
+        """Compile every (model, bucket) plan — and, with CacheG enabled,
+        every (bucket, fieldset) materializer — once with placeholder inputs.
+        """
         buckets = buckets if buckets is not None else self.sc.ladder.buckets
         b = self.sc.batch_slots
         for bucket in buckets:
@@ -133,8 +160,11 @@ class GraphServe:
                 pg = dataclasses.replace(
                     empty, features=np.zeros((bucket, e.cfg.in_feats),
                                              np.float32))
-                ops = stack_operands(
-                    [build_operands(pg, e.cfg, lean=True)] * b)
+                if self.sc.use_cacheg:
+                    single = self._materializer(compact_operands(pg, e.cfg))
+                else:
+                    single = build_operands(pg, e.cfg, lean=True)
+                ops = stack_operands([single] * b)
                 x = jnp.zeros((b, bucket, e.cfg.in_feats), jnp.float32)
                 out = self.plan_for(name, bucket)(e.params, x, ops)
                 out.block_until_ready()
@@ -149,11 +179,30 @@ class GraphServe:
             f"{self._warm_blobs} at warmup")
 
     # ------------------------------------------------------------------ intake
-    def _enqueue(self, model: str, pg: PaddedGraph) -> int:
+    def _device_operands(self, model: str, pg: PaddedGraph) -> GranniteOperands:
+        """Build one graph's device-resident operands, preferring the CacheG
+        compact transfer + on-device materialization; directed GCN/GAT graphs
+        (SymG needs symmetry) fall back to the eager dense upload — same
+        plans, no new traces, just more host→device bytes."""
         e = self.models[model]
+        if self.sc.use_cacheg:
+            if e.cfg.kind == "sage" or is_symmetric_adjacency(pg.adj):
+                # symmetry was just checked — don't pay the O(cap²)
+                # comparison a second time inside the packer
+                co = compact_operands(pg, e.cfg, check_symmetry=False)
+                self.metrics["operand_bytes_h2d"] += co.nbytes
+                return self._materializer(co)
+            self.metrics["cacheg_fallbacks"] += 1
+        ops = build_operands(pg, e.cfg, lean=True)
+        self.metrics["operand_bytes_h2d"] += operand_nbytes(ops)
+        return ops
+
+    def _enqueue(self, model: str, pg: PaddedGraph,
+                 ops: Optional[GranniteOperands] = None) -> int:
         now = time.perf_counter()
         req = GNNRequest(uid=self._uid, model=model, pg=pg,
-                         ops=build_operands(pg, e.cfg, lean=True),
+                         ops=ops if ops is not None
+                         else self._device_operands(model, pg),
                          bucket=pg.capacity, submitted_s=now)
         self._uid += 1
         if self.metrics["first_submit_s"] is None:
@@ -166,27 +215,64 @@ class GraphServe:
         return self._enqueue(model, self.sc.ladder.pad(g))
 
     def attach(self, g: Graph, *, model: str) -> int:
-        """Register an evolving graph; returns a graph_id for update/query."""
+        """Register an evolving graph; returns a graph_id for update/query.
+
+        Operands materialize lazily on the first `query()` and stay cached
+        on device until `update()` changes the structure."""
         gid = self._gid
         self._gid += 1
         self.graphs[gid] = (model, self.sc.ladder.pad(g))
+        self._graph_version[gid] = 0
         return gid
+
+    def detach(self, graph_id: int) -> None:
+        """Release an attached graph and its device-resident operands.
+
+        The cache pins O(cap²) float32 per attached graph in device memory
+        (~32 MB for GAT at cap=2048) — long-running multi-tenant servers
+        must detach graphs they stop serving, or the cache grows without
+        bound (there is deliberately no silent LRU: evicting a live tenant's
+        operands would turn its next query into a surprise re-materialize).
+        """
+        self._operand_cache.pop(
+            (graph_id, self._graph_version.pop(graph_id, -1)), None)
+        self.graphs.pop(graph_id, None)
 
     def update(self, graph_id: int, edge_index: np.ndarray, num_nodes: int,
                features: np.ndarray) -> bool:
-        """GrAd update of an attached graph; True if it climbed the ladder."""
+        """GrAd update of an attached graph; True if it climbed the ladder.
+
+        Bumps the structure version, which invalidates the CacheG operand
+        cache — the next `query()` re-materializes exactly once."""
         model, pg = self.graphs[graph_id]
         pg, rebucketed = self.sc.ladder.grow(pg, edge_index, num_nodes,
                                              features)
         self.graphs[graph_id] = (model, pg)
+        ver = self._graph_version[graph_id]
+        self._operand_cache.pop((graph_id, ver), None)
+        self._graph_version[graph_id] = ver + 1
         if rebucketed:
             self.metrics["rebucket_events"] += 1
         return rebucketed
 
     def query(self, graph_id: int) -> int:
-        """Enqueue inference over an attached graph's current snapshot."""
+        """Enqueue inference over an attached graph's current snapshot.
+
+        CacheG hit path: an unchanged structure serves straight from the
+        device-resident cache — zero host-side operand construction, zero
+        operand bytes over the link."""
         model, pg = self.graphs[graph_id]
-        return self._enqueue(model, pg)
+        if not self.sc.use_cacheg:
+            return self._enqueue(model, pg)
+        key = (graph_id, self._graph_version[graph_id])
+        ops = self._operand_cache.get(key)
+        if ops is None:
+            self.metrics["operand_cache_misses"] += 1
+            ops = self._device_operands(model, pg)
+            self._operand_cache[key] = ops
+        else:
+            self.metrics["operand_cache_hits"] += 1
+        return self._enqueue(model, pg, ops)
 
     # --------------------------------------------------------------- execution
     def run(self) -> List[GNNRequest]:
@@ -207,6 +293,9 @@ class GraphServe:
         slots = batch + [batch[-1]] * (b - len(batch))
         e = self.models[head.model]
         x = jnp.asarray(stack_padded([r.pg for r in slots]).features)
+        # CacheG: r.ops are device-resident (materialized or cached), so this
+        # stack is a device-side concat — only the activations `x` crossed
+        # the host→device link for this dispatch (DESIGN.md §7).
         ops = stack_operands([r.ops for r in slots])
         logits = self.plan_for(head.model, head.bucket)(e.params, x, ops)
         logits.block_until_ready()
@@ -239,6 +328,10 @@ class GraphServe:
             "batch_occupancy": (self.metrics["slots_filled"]
                                 / max(self.metrics["slots_total"], 1)),
             "rebucket_events": self.metrics["rebucket_events"],
+            "operand_bytes_h2d": self.metrics["operand_bytes_h2d"],
+            "operand_cache_hits": self.metrics["operand_cache_hits"],
+            "operand_cache_misses": self.metrics["operand_cache_misses"],
+            "cacheg_fallbacks": self.metrics["cacheg_fallbacks"],
             "throughput_rps": (len(self.finished) / span if span > 0 else 0.0),
             "p50_latency_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
             "p99_latency_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,

@@ -1,0 +1,352 @@
+"""CacheG operand pipeline (DESIGN.md §7): SymG bit-packed transfer, device
+materialization, the device-resident operand cache, byte accounting, and the
+satellite fixes that ride along (grow() supervision carry, vectorized SAGE
+sampling, bucket-rule dedup)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.models as models_mod
+import repro.runtime.gnn_server as server_mod
+from repro.core.graph import (BucketLadder, Graph, is_symmetric_adjacency,
+                              node_bucket, pack_adjacency_bits, pad_graph,
+                              required_capacity, symg_pack_adjacency_bits,
+                              triangular_nbits)
+from repro.core.masks import sage_sample_adjacency
+from repro.core.models import (GNNConfig, build_operands, compact_operands,
+                               forward_grannite, materialize_operands,
+                               operand_nbytes, _unpack_adjacency)
+from repro.data.graphs import planetoid_like
+from repro.runtime.gnn_server import GraphServe, GraphServeConfig
+
+IN_FEATS, CLASSES = 16, 4
+
+
+def _graph(n, seed=0):
+    return planetoid_like(num_nodes=n, num_edges=3 * n, num_feats=IN_FEATS,
+                          num_classes=CLASSES, seed=seed, train_per_class=2)
+
+
+def _cfg(kind):
+    return GNNConfig(kind=kind, in_feats=IN_FEATS, hidden=16,
+                     num_classes=CLASSES, heads=4)
+
+
+def _engine(*kinds, use_cacheg=True, buckets=(128,), batch_slots=2):
+    sc = GraphServeConfig(ladder=BucketLadder(buckets=buckets),
+                          batch_slots=batch_slots, return_logits=True,
+                          use_cacheg=use_cacheg)
+    eng = GraphServe(sc, seed=0)
+    for kind in kinds:
+        eng.register_model(kind, _cfg(kind))
+    eng.warmup()
+    return eng
+
+
+# ------------------------------------------------- SymG bit-pack round trip
+
+
+@pytest.mark.parametrize("cap", [128, 256])
+def test_symg_bits_device_roundtrip(cap):
+    """pack (host, triangular bits) -> upload -> unpack (device) is lossless
+    for an undirected 0/1 adjacency, at exactly cap(cap+1)/2 bits."""
+    pg = pad_graph(_graph(cap - 30, seed=1), capacity=cap)
+    assert is_symmetric_adjacency(pg.adj)
+    packed = symg_pack_adjacency_bits(pg.adj)
+    assert packed.nbytes == triangular_nbits(cap) // 8
+    co = compact_operands(pg, _cfg("gcn"))
+    np.testing.assert_array_equal(np.asarray(co.packed), packed)
+    np.testing.assert_array_equal(np.asarray(_unpack_adjacency(co)), pg.adj)
+
+
+def test_full_bitpack_device_roundtrip():
+    """The non-SymG (directed / SAGE-sample) row-major packing round-trips."""
+    rng = np.random.default_rng(3)
+    adj = (rng.random((128, 128)) < 0.05).astype(np.float32)
+    co = models_mod.CompactOperands(
+        packed=jnp.asarray(pack_adjacency_bits(adj)),
+        degree=jnp.zeros((128,), jnp.float32),
+        num_nodes=jnp.asarray(128, jnp.int32),
+        capacity=128, fields=("sample_mask",), triangular=False)
+    np.testing.assert_array_equal(np.asarray(_unpack_adjacency(co)), adj)
+
+
+def test_symg_pack_rejects_directed():
+    adj = np.zeros((128, 128), np.float32)
+    adj[3, 7] = 1.0                         # no reverse edge
+    with pytest.raises(ValueError):
+        symg_pack_adjacency_bits(adj)
+
+
+# ------------------------------------- compact == eager operand equivalence
+
+
+@pytest.mark.parametrize("kind", ["gcn", "gat", "sage"])
+def test_materialized_operands_match_eager(kind):
+    pg = pad_graph(_graph(100), capacity=128)
+    cfg = _cfg(kind)
+    eager = build_operands(pg, cfg, lean=True)
+    mat = materialize_operands(compact_operands(pg, cfg))
+    for f in ("norm_adj", "mask_mult", "bias_add", "sample_mask",
+              "mean_mask"):
+        a, b = np.asarray(getattr(eager, f)), np.asarray(getattr(mat, f))
+        assert a.shape == b.shape, (kind, f)
+        np.testing.assert_allclose(a, b, atol=1e-6, err_msg=f"{kind}/{f}")
+
+
+def test_materialized_gcn_matches_eager_with_explicit_self_loop():
+    """An explicit (i, i) edge in edge_index must not double-count in the
+    CacheG degree: both paths add self loops idempotently."""
+    g = _graph(100)
+    loops = np.array([[0, 5], [0, 5]], np.int32)
+    pg = pad_graph(Graph(edge_index=np.concatenate([g.edge_index, loops],
+                                                   axis=1),
+                         num_nodes=g.num_nodes, features=g.features),
+                   capacity=128)
+    cfg = _cfg("gcn")
+    eager = build_operands(pg, cfg, lean=True)
+    mat = materialize_operands(compact_operands(pg, cfg))
+    np.testing.assert_allclose(np.asarray(eager.norm_adj),
+                               np.asarray(mat.norm_adj), atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ["gcn", "gat", "sage"])
+def test_batched_cacheg_matches_eager_path(kind):
+    """Same params, same graphs: the CacheG engine's batched logits equal the
+    eager-operand engine's within fp32 tolerance."""
+    graphs = [_graph(n, seed=i) for i, n in enumerate([60, 110, 90])]
+    outs = {}
+    for mode in (True, False):
+        eng = _engine(kind, use_cacheg=mode)
+        for g in graphs:
+            eng.submit(g, model=kind)
+        eng.run()
+        eng.assert_warm()
+        outs[mode] = {r.uid: r.logits for r in eng.finished}
+    assert outs[True].keys() == outs[False].keys()
+    for uid in outs[True]:
+        np.testing.assert_allclose(outs[True][uid], outs[False][uid],
+                                   atol=1e-5)
+
+
+# --------------------------------------------- device-resident operand cache
+
+
+def test_repeated_query_skips_host_operand_build(monkeypatch):
+    """After the first query of an attached graph, later queries perform ZERO
+    host-side operand construction (neither eager nor compact) and move zero
+    operand bytes."""
+    eng = _engine("gat")
+    gid = eng.attach(_graph(100), model="gat")
+
+    calls = {"eager": 0, "compact": 0}
+    real_build, real_compact = server_mod.build_operands, server_mod.compact_operands
+
+    def count_build(*a, **k):
+        calls["eager"] += 1
+        return real_build(*a, **k)
+
+    def count_compact(*a, **k):
+        calls["compact"] += 1
+        return real_compact(*a, **k)
+
+    monkeypatch.setattr(server_mod, "build_operands", count_build)
+    monkeypatch.setattr(server_mod, "compact_operands", count_compact)
+
+    eng.query(gid)                          # structure miss: one compact build
+    eng.run()
+    assert calls == {"eager": 0, "compact": 1}
+    bytes_after_miss = eng.metrics["operand_bytes_h2d"]
+
+    for _ in range(4):                      # warm hits: no host work at all
+        eng.query(gid)
+    eng.run()
+    eng.assert_warm()
+    assert calls == {"eager": 0, "compact": 1}
+    assert eng.metrics["operand_bytes_h2d"] == bytes_after_miss
+    s = eng.summary()
+    assert s["operand_cache_misses"] == 1
+    assert s["operand_cache_hits"] == 4
+
+
+def test_update_invalidates_operand_cache():
+    """update() bumps the structure version: the next query re-materializes
+    exactly once and serves the NEW structure, never the stale cache."""
+    eng = _engine("gcn")
+    g = _graph(100)
+    gid = eng.attach(g, model="gcn")
+    eng.query(gid)
+    eng.run()
+    assert eng.summary()["operand_cache_misses"] == 1
+
+    # add undirected edges (keeps the SymG path live) between real nodes
+    extra = np.array([[0, 1, 2, 3], [5, 6, 7, 8]], np.int32)
+    ei = np.concatenate([g.edge_index, extra, extra[::-1]], axis=1)
+    eng.update(gid, ei, g.num_nodes, g.features)
+    eng.query(gid)
+    eng.query(gid)                          # second query hits the new entry
+    eng.run()
+    eng.assert_warm()
+    s = eng.summary()
+    assert s["operand_cache_misses"] == 2
+    assert s["operand_cache_hits"] == 1
+    assert s["cacheg_fallbacks"] == 0
+
+    # the served logits reflect the updated structure
+    e = eng.models["gcn"]
+    fresh = pad_graph(Graph(edge_index=ei, num_nodes=g.num_nodes,
+                            features=g.features), capacity=128)
+    ref = forward_grannite(e.params, e.cfg, jnp.asarray(fresh.features),
+                           build_operands(fresh, e.cfg, lean=True),
+                           e.techniques)
+    np.testing.assert_allclose(eng.finished[-1].logits,
+                               np.asarray(ref)[: g.num_nodes], atol=1e-5)
+
+
+def test_directed_graph_falls_back_to_eager_upload():
+    """A directed GCN graph cannot take the SymG transfer; the engine serves
+    it through the eager dense upload (counted) without breaking warmth."""
+    g = _graph(100)
+    adj = np.zeros((g.num_nodes, g.num_nodes), bool)
+    adj[g.edge_index[1], g.edge_index[0]] = True
+    pairs = np.argwhere(~adj & ~adj.T & ~np.eye(g.num_nodes, dtype=bool))
+    i, j = pairs[0]                          # guaranteed-absent pair
+    ei = np.concatenate([g.edge_index,
+                         np.array([[i], [j]], np.int32)], axis=1)
+    directed = Graph(edge_index=ei, num_nodes=g.num_nodes,
+                     features=g.features)
+    eng = _engine("gcn")
+    gid = eng.attach(directed, model="gcn")
+    eng.query(gid)
+    eng.query(gid)                          # fallback ops still cache-hit
+    eng.run()
+    eng.assert_warm()
+    s = eng.summary()
+    assert s["cacheg_fallbacks"] == 1
+    assert s["operand_cache_hits"] == 1
+
+
+def test_detach_releases_cache_and_graph():
+    eng = _engine("gcn")
+    gid = eng.attach(_graph(100), model="gcn")
+    eng.query(gid)
+    eng.run()
+    assert len(eng._operand_cache) == 1
+    eng.detach(gid)
+    assert eng._operand_cache == {} and gid not in eng.graphs
+    eng.detach(gid)                         # idempotent
+
+
+# ------------------------------------------------------ h2d byte accounting
+
+
+def test_operand_bytes_accounting_matches_array_sizes():
+    """operand_bytes_h2d is exactly the nbytes of what each path uploads:
+    packed bits + degree + num_nodes for CacheG, the five dense fields for
+    the eager path."""
+    cap, n_q = 128, 3
+    g = _graph(100)
+
+    eng = _engine("gat", use_cacheg=True)
+    gid = eng.attach(g, model="gat")
+    for _ in range(n_q):
+        eng.query(gid)
+    eng.run()
+    compact_expected = (triangular_nbits(cap) // 8    # SymG bit-packed adj
+                        + cap * 4                     # degree float32
+                        + 4)                          # num_nodes int32
+    assert eng.summary()["operand_bytes_h2d"] == compact_expected
+
+    eng = _engine("gat", use_cacheg=False)
+    gid = eng.attach(g, model="gat")
+    for _ in range(n_q):
+        eng.query(gid)
+    eng.run()
+    pg = pad_graph(g, capacity=cap)
+    per_request = operand_nbytes(build_operands(pg, _cfg("gat"), lean=True))
+    assert per_request == 2 * 4 * cap * cap + 3 * 4   # 2 masks + 3 holes
+    assert eng.summary()["operand_bytes_h2d"] == n_q * per_request
+    # the compact transfer beats the eager upload by far more than the
+    # acceptance floor even on a single cold miss
+    assert per_request / compact_expected > 10
+
+
+# ------------------------------------------------------- satellite: grow()
+
+
+def test_grow_preserves_supervision_arrays():
+    """Re-bucketing an attached graph must carry labels/train/test masks;
+    new nodes come up unlabeled (-1 / False)."""
+    lad = BucketLadder(buckets=(128, 256))
+    g = _graph(100)
+    pg = lad.pad(g)
+    assert pg.capacity == 128
+
+    n_new = 150                             # outgrows 128 -> re-bucket to 256
+    feats = np.zeros((n_new, IN_FEATS), np.float32)
+    feats[: g.num_nodes] = g.features
+    ei = g.edge_index
+    grown, rebucketed = lad.grow(pg, ei, n_new, feats)
+    assert rebucketed and grown.capacity == 256
+    np.testing.assert_array_equal(grown.labels[: g.num_nodes],
+                                  g.labels)
+    assert (grown.labels[g.num_nodes:] == -1).all()
+    np.testing.assert_array_equal(grown.train_mask[: g.num_nodes],
+                                  g.train_mask)
+    np.testing.assert_array_equal(grown.test_mask[: g.num_nodes],
+                                  g.test_mask)
+    assert not grown.train_mask[g.num_nodes:].any()
+    assert not grown.test_mask[g.num_nodes:].any()
+
+
+# ---------------------------------------------- satellite: SAGE vectorized
+
+
+def test_sage_sampler_vectorized_semantics():
+    rng_adj = np.random.default_rng(5)
+    cap, n, k = 128, 100, 6
+    adj = (rng_adj.random((cap, cap)) < 0.15).astype(np.float32)
+    np.fill_diagonal(adj, 0.0)
+
+    s1 = sage_sample_adjacency(adj, n, max_neighbors=k,
+                               rng=np.random.default_rng(7))
+    s2 = sage_sample_adjacency(adj, n, max_neighbors=k,
+                               rng=np.random.default_rng(7))
+    np.testing.assert_array_equal(s1, s2)   # seeded-rng determinism
+
+    off_diag = s1 - np.diag(np.diag(s1))
+    assert (off_diag.sum(axis=1) <= k).all()          # cap respected
+    assert (off_diag <= adj).all()                    # sampled ⊆ neighbors
+    assert (np.diag(s1)[:n] == 1.0).all()             # include_self
+    assert (s1[n:] == 0).all()                        # padded rows inert
+    # rows with <= k neighbors keep every neighbor
+    few = adj[:n].sum(axis=1) <= k
+    np.testing.assert_array_equal(off_diag[:n][few], adj[:n][few])
+
+
+def test_sage_sampler_no_neighbors_and_zero_k():
+    adj = np.zeros((128, 128), np.float32)
+    out = sage_sample_adjacency(adj, 10, max_neighbors=4)
+    assert (np.diag(out)[:10] == 1.0).all() and out.sum() == 10
+    out = sage_sample_adjacency(adj, 10, max_neighbors=0, include_self=False)
+    assert out.sum() == 0
+
+
+# ------------------------------------------ satellite: bucket-rule dedup
+
+
+def test_bucket_rules_share_required_capacity():
+    """node_bucket and BucketLadder.bucket_for both round up the same
+    admission target (the slack rule lives in ONE place)."""
+    lad = BucketLadder(buckets=(128, 256, 512, 1024, 2048, 4096), slack=0.5)
+    for n in (10, 100, 170, 300, 683, 1365):
+        want = required_capacity(n, lad.slack)
+        nb = node_bucket(n, slack=lad.slack)
+        assert nb >= want and nb % 128 == 0
+        assert lad.bucket_for(n) >= want
+        # whenever the free-form tile multiple is itself a rung, the two
+        # rules agree exactly — the admission target is computed once
+        if nb in lad.buckets:
+            assert lad.bucket_for(n) == nb
