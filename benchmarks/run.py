@@ -5,9 +5,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record) and
 writes benchmarks/results.json. ``--bench-json`` additionally writes the
-serving-throughput + CacheG operand-bytes rows to a standalone file (CI
-commits none of it, but the artifact tracks the perf trajectory per PR). The roofline report (§Roofline) is generated
-separately by launch/dryrun.py (needs the 512-device placeholder env).
+serving-throughput, CacheG operand-bytes, and quality-tier rows to a
+standalone file (CI commits none of it, but the artifact tracks the perf
+trajectory per PR — schema in benchmarks/README.md). The roofline report
+(§Roofline) is generated separately by launch/dryrun.py (needs the
+512-device placeholder env).
 """
 from __future__ import annotations
 
@@ -49,6 +51,10 @@ def main() -> None:
     # the paper-scale cap-2048 GAT case (2 x 16 MB eager masks per query)
     gnn_paper.operand_pipeline(cap=1024 if args.quick else 2048,
                                n_queries=4 if args.quick else 6)
+    # quality tiers (DESIGN.md §8): short training in --quick mode — the
+    # per-tier latency/bytes/accuracy-delta rows still land in BENCH_gnn.json
+    gnn_paper.quality_tiers(epochs=12 if args.quick else 60,
+                            n_queries=3 if args.quick else 6)
     lm_subs.ssd_vs_sequential()
     lm_subs.moe_dispatch_paths()
     lm_subs.serving_bucket_reuse()
@@ -59,7 +65,8 @@ def main() -> None:
 
     if args.bench_json:
         perf = [r for r in ROWS
-                if r["name"].startswith(("serve/", "operand_pipeline/"))]
+                if r["name"].startswith(("serve/", "operand_pipeline/",
+                                         "quality_tiers/"))]
         with open(args.bench_json, "w") as f:
             json.dump({"rows": perf}, f, indent=1)
         print(f"# wrote {len(perf)} perf rows -> {args.bench_json}")

@@ -14,6 +14,19 @@ dynamic-slice ops, which are priced at GATHER_BW — the serialized
 row-granularity DMA rate that models the NPU's DSP path (and the TPU's own
 poor gather throughput). INT8 dots get the 2x MXU rate (QuantGr's claim).
 
+One backend artifact is repriced: the CPU emitter lowers s8 dots by
+materializing s32 COPIES of the int8 operands (convert(s8)->s32 feeding the
+dot), where an MXU/NPU int8 datapath reads the 1-byte operands natively.
+`analyze` subtracts the excess: 3 B/element for every s32 operand of every
+s32-accumulating dot (4B artifact read vs 1B native — counted per dot, so
+an operand converted once but read by several dots, like the cached int8 Â
+feeding both GCN layers, is repriced at every use), plus 5 B/element per
+widening convert (its 1B read + 4B write simply don't exist natively).
+Without this, QuantGr's operand-byte shrink — the entire point of shipping
+int8 Â (DESIGN.md §8) — would be invisible to the model. The repricing
+assumes s32 dots ARE quantized-int8 dots, which holds for every path in
+this repo (nothing dots genuine int32 data).
+
 The GNN paths contain no scans (heads unroll), so HLO cost analysis is
 exact here — no two-point correction needed.
 """
@@ -38,6 +51,13 @@ _GATHER_RE = re.compile(
     r"dynamic-update-slice)\(", )
 
 _INT8_DOT_RE = re.compile(r"=\s*s32\[[\d,]*\][^=]*?\bdot\(")
+
+# CPU lowering artifact: s8 dot operands widened to s32 copies (see module
+# docstring) — native int8 datapaths read the 1-byte form directly.
+_S8_WIDEN_RE = re.compile(r"=\s*s32\[([\d,]*)\][^=]*?\bconvert\(s8\[")
+_S32_DOT_OPERANDS_RE = re.compile(       # operands carry {layout} commas
+    r"=\s*s32\[[\d,]*\][^=]*?\bdot\(s32\[([\d,]*)\]\S*\s+%[^,]+,"
+    r"\s+s32\[([\d,]*)\]")
 
 
 def _bytes_of(dtype: str, dims: str) -> int:
@@ -66,6 +86,13 @@ def analyze(fn: Callable, *args) -> Dict[str, float]:
     flops = float(ca.get("flops", 0.0))
     trans = float(ca.get("transcendentals", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
+    if has_int8_dot:
+        excess = sum(5.0 * _bytes_of("s8", m.group(1))  # element counts
+                     for m in _S8_WIDEN_RE.finditer(txt))
+        excess += sum(3.0 * (_bytes_of("s8", m.group(1))
+                             + _bytes_of("s8", m.group(2)))
+                      for m in _S32_DOT_OPERANDS_RE.finditer(txt))
+        byts = max(byts - excess, 0.0)
 
     t_mxu = flops / (PEAK_INT8 if has_int8_dot else PEAK_BF16)
     t_vpu = trans / VPU_RATE

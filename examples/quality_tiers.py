@@ -1,0 +1,90 @@
+"""Quality-tier serving walkthrough (DESIGN.md §8): one trained GCN served
+at three quality tiers through a single warm GraphServe engine.
+
+The paper's Step 3 trades accuracy for efficiency (QuantGr INT8, GrAx
+approximations). In production that trade is a PER-REQUEST decision — a
+free-tier request takes int8, a paying tenant takes fp32 — so GraphServe
+models tiers as first-class serving state:
+
+  register  — a model carries a tier registry: fp32 / int8 / int8+grax,
+              each a Techniques variant with its own ExecutionPlan;
+  warm      — warmup() compiles every (model, bucket, tier) plan, QuantGr
+              tiers against a placeholder calibration (same pytree shape
+              as any real one), so NOTHING traces after this point;
+  calibrate — the first attach() runs the once-per-(model, tier) QuantGr
+              calibration and measures accuracy_delta_vs_fp32 on the
+              held-out split of the calibration graph;
+  query     — query(gid, tier=...) picks the tier per request; an
+              uncalibrated quant tier falls back to fp32 (counted, never
+              an error); all tiers share ONE CacheG operand-cache entry;
+  metrics   — summary() reports per-tier p50/p99/throughput and the
+              accuracy deltas.
+
+  PYTHONPATH=src python examples/quality_tiers.py
+"""
+import jax
+
+from repro.core.graph import BucketLadder, pad_graph
+from repro.core.models import (GNNConfig, build_operands, forward_grannite,
+                               train_node_classifier)
+from repro.data.graphs import planetoid_like
+from repro.runtime.gnn_server import (STANDARD_TIERS, GraphServe,
+                                      GraphServeConfig, tier_techniques)
+
+
+def main():
+    in_feats, classes, n = 64, 7, 200
+    g = planetoid_like(num_nodes=n, num_edges=3 * n, num_feats=in_feats,
+                       num_classes=classes, seed=0, train_per_class=5)
+    cfg = GNNConfig(kind="gcn", in_feats=in_feats, hidden=64,
+                    num_classes=classes)
+
+    # --- train once (fp32 dense path); every tier serves the SAME params
+    pg = pad_graph(g, capacity=256)
+    ops = build_operands(pg, cfg, lean=True)
+    t_fp32 = tier_techniques("gcn")["fp32"]
+    params = train_node_classifier(
+        jax.random.PRNGKey(0), cfg, pg,
+        lambda p, x: forward_grannite(p, cfg, x, ops, t_fp32), epochs=40)
+
+    # --- register + warm: every (model, bucket, tier) plan compiles NOW
+    sc = GraphServeConfig(ladder=BucketLadder(buckets=(256,)), batch_slots=2)
+    eng = GraphServe(sc, seed=0)
+    eng.register_model("gcn", cfg, params, tiers=STANDARD_TIERS)
+    eng.warmup()
+    print(f"warm: {eng.compiled_blobs} blobs (fp32 + int8 plans — int8+grax "
+          f"aliases int8 for GCN — + CacheG materializer + int8-Â deriver)")
+
+    # --- a quant tier BEFORE calibration: served via fp32, counted
+    uid = eng.submit(g, model="gcn", tier="int8")
+    eng.run()
+    served = [r for r in eng.finished if r.uid == uid][0]
+    print(f"pre-calibration int8 request served as tier={served.tier!r} "
+          f"(tier_fallbacks={eng.metrics['tier_fallbacks']})")
+
+    # --- attach: runs the once-per-(model, tier) calibration + quality audit
+    gid = eng.attach(g, model="gcn")
+    deltas = eng.models["gcn"].accuracy_delta
+    print("accuracy_delta_vs_fp32 (pts, held-out):",
+          {k: round(v, 3) for k, v in deltas.items()})
+
+    # --- mixed-tier traffic over ONE attached graph, one operand entry
+    for i in range(12):
+        eng.query(gid, tier=STANDARD_TIERS[i % 3])
+    eng.run()
+    eng.assert_warm()          # zero recompiles across all of the above
+
+    s = eng.summary()
+    print(f"\noperand cache: {s['operand_cache_misses']} miss / "
+          f"{s['operand_cache_hits']} hits (all tiers share one fp32 entry; "
+          f"the int8 Â is derived once per structure version)")
+    for tier, st in s["tiers"].items():
+        print(f"  {tier:10s} {st['requests']:2d} req  "
+              f"p50={st['p50_latency_ms']:6.1f} ms  "
+              f"p99={st['p99_latency_ms']:6.1f} ms  "
+              f"{st['throughput_rps']:6.1f} req/s")
+    assert s["tier_fallbacks"] == 1          # only the pre-calibration one
+
+
+if __name__ == "__main__":
+    main()

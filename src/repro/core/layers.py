@@ -95,13 +95,21 @@ def gcn_baseline(params: Dict, x: jnp.ndarray, edge_index: jnp.ndarray,
 
 def gcn_grannite(params: Dict, x: jnp.ndarray, norm_adj: jnp.ndarray,
                  t: Techniques, *, quant: Optional[QuantizedLinear] = None,
-                 quant_agg=None, block_sparse=None) -> jnp.ndarray:
+                 quant_agg=None, agg_h_scale=None, tier_aq=None,
+                 tier_a_scale=None, block_sparse=None) -> jnp.ndarray:
     """StaGr/PreG path: out = Â @ (X W) + b — two dense matmuls.
 
     Â arrives precomputed (PreG on host when t.graphsplit) and either baked
     (StaGr, static) or as a runtime arg (GrAd) — identical math here; the
     trace/caching difference is exercised by the caller. QuantGr covers the
-    WHOLE datapath (combine + aggregation) as on the paper's NPU.
+    WHOLE datapath (combine + aggregation) as on the paper's NPU. The
+    aggregation has three QuantGr forms, all bit-identical for the same Â:
+    `quant_agg` (offline QuantizedAgg, one baked graph — the paper-table
+    path); `agg_h_scale` + `tier_aq`/`tier_a_scale` (serving tiers: int8 Â
+    derived ONCE per structure version and passed as a runtime arg, so the
+    plan reads 1-byte Â rows instead of 4-byte — DESIGN.md §8); or
+    `agg_h_scale` alone (in-trace derivation, `quantize_agg_dynamic`, for
+    one-shot/eager calls where caching would never amortize).
     """
     if t.quantgr and quant is not None:
         h = apply_quantized_linear(x, quant, use_kernel=t.use_pallas)
@@ -114,6 +122,15 @@ def gcn_grannite(params: Dict, x: jnp.ndarray, norm_adj: jnp.ndarray,
     if t.quantgr and quant_agg is not None:
         from .quant import apply_quantized_agg
         agg = apply_quantized_agg(quant_agg, h, use_kernel=t.use_pallas)
+    elif t.quantgr and agg_h_scale is not None:
+        from .quant import (QuantizedAgg, apply_quantized_agg,
+                            quantize_agg_dynamic)
+        if tier_aq is not None:
+            qa = QuantizedAgg(aq=tier_aq, a_scale=tier_a_scale,
+                              h_scale=agg_h_scale)
+        else:
+            qa = quantize_agg_dynamic(norm_adj, agg_h_scale)
+        agg = apply_quantized_agg(qa, h, use_kernel=t.use_pallas)
     elif t.grasp and block_sparse is not None:
         from repro.kernels import ops as kops
         agg = kops.bitmap_spmm(block_sparse, h)
@@ -170,14 +187,24 @@ def gat_baseline(params: Dict, x: jnp.ndarray, edge_index: jnp.ndarray,
 
 def gat_grannite(params: Dict, x: jnp.ndarray, mask_mult: jnp.ndarray,
                  bias_add: jnp.ndarray, t: Techniques, *, heads: int,
-                 out_feats: int, concat: bool = True) -> jnp.ndarray:
+                 out_feats: int, concat: bool = True,
+                 quant: Optional[QuantizedLinear] = None) -> jnp.ndarray:
     """EffOp dense GAT: scores as broadcast-add, dense masked softmax,
     aggregation as matmul. GrAx1 picks additive masking, GrAx2 the fused
     broadcast ordering; the Pallas `gat_attention` kernel fuses the whole
     score->softmax->aggregate pipeline per head.
+
+    QuantGr on GAT quantizes the combine matmul X @ W (the FLOPs-dominant
+    term at Cora's F=1433); the per-head score einsums and the softmax stay
+    fp32 — attention weights are exactly the small-magnitude tensors the
+    paper keeps in float.
     """
     n = x.shape[0]
-    h = _gat_head_feats(params, x, heads, out_feats)          # (N, H, F)
+    if t.quantgr and quant is not None:
+        h = apply_quantized_linear(x, quant, use_kernel=t.use_pallas)
+        h = h.reshape(n, heads, out_feats)
+    else:
+        h = _gat_head_feats(params, x, heads, out_feats)      # (N, H, F)
     alpha_src = jnp.einsum("nhf,hf->nh", h, params["a_src"])  # (N, H)
     alpha_dst = jnp.einsum("nhf,hf->nh", h, params["a_dst"])
 
@@ -239,8 +266,22 @@ def sage_baseline(params: Dict, x: jnp.ndarray, edge_index: jnp.ndarray,
 
 def sage_grannite(params: Dict, x: jnp.ndarray, sample_mask: jnp.ndarray,
                   mean_mask: jnp.ndarray, t: Techniques, *,
-                  aggregator: str) -> jnp.ndarray:
-    """StaGr sampled-adjacency SAGE. mean: mask matmul; max: GrAx3."""
+                  aggregator: str,
+                  quant: Optional[Dict] = None) -> jnp.ndarray:
+    """StaGr sampled-adjacency SAGE. mean: mask matmul; max: GrAx3.
+
+    QuantGr quantizes the three combine matmuls (`self` / `neigh` / `pool`
+    keys of `quant`, each a QuantizedLinear); the mean-mask aggregation stays
+    fp32 — its rows are already 1/deg-scaled and contribute negligible FLOPs
+    next to the F-wide combines.
+    """
+    q = quant if (t.quantgr and quant is not None) else {}
+
+    def _lin(v, w, ql):
+        if ql is not None:
+            return apply_quantized_linear(v, ql, use_kernel=t.use_pallas)
+        return v @ w
+
     if aggregator == "mean":
         if t.use_pallas:
             from repro.kernels import ops as kops
@@ -248,7 +289,8 @@ def sage_grannite(params: Dict, x: jnp.ndarray, sample_mask: jnp.ndarray,
         else:
             agg = mean_mask @ x
     elif aggregator == "max":
-        pooled = jax.nn.relu(x @ params["w_pool"] + params["b_pool"])
+        pooled = jax.nn.relu(_lin(x, params["w_pool"], q.get("pool"))
+                             + params["b_pool"])
         if t.use_pallas and t.grax3:
             from repro.kernels import ops as kops
             agg = kops.sage_max(sample_mask, pooled)
@@ -256,4 +298,5 @@ def sage_grannite(params: Dict, x: jnp.ndarray, sample_mask: jnp.ndarray,
             agg = effop.masked_max_aggregate(pooled, sample_mask, grax3=t.grax3)
     else:
         raise ValueError(aggregator)
-    return x @ params["w_self"] + agg @ params["w_neigh"] + params["b"]
+    return (_lin(x, params["w_self"], q.get("self"))
+            + _lin(agg, params["w_neigh"], q.get("neigh")) + params["b"])

@@ -5,6 +5,28 @@ trained with Adam-style optimization, evaluated top-1 on a held-out mask.
 Both execution paths (baseline edge-list vs GraNNite dense) share the SAME
 parameters, so the benchmark harness compares *implementations*, never
 different models.
+
+Module contracts (what the serving layer relies on):
+
+  * Pytree registration — `GranniteOperands` and `CompactOperands` are
+    registered pytrees: runtime leaves cross jit/vmap boundaries as
+    arguments, and `CompactOperands`' aux data (capacity, fields,
+    triangular) is the ONLY static structure, so one jitted materializer
+    specializes exactly once per (bucket, operand-fieldset).
+  * Zero-recompile accounting — `ExecutionPlan.trace_count` and
+    `OperandMaterializer.trace_count` increment on actual jit traces (a
+    python side effect inside the traced fn), never on cache-key inserts.
+    `GraphServe.compiled_blobs` sums them; `assert_warm()` is therefore a
+    claim about the COMPILER's behavior, not our bookkeeping.
+  * Plan identity — `PlanKey = (cfg, capacity, batch, techniques)`. Params
+    and QuantGr calibrations are runtime arguments, never closed over, so
+    models sharing a key legitimately share one compiled blob, and a
+    quality tier (DESIGN.md §8) is fully identified by its `Techniques`.
+  * Calibration shape invariance — `calibrate_tier` output contains only
+    model-shaped arrays (per-layer int8 weights + scalar scales); its
+    pytree structure is a function of `GNNConfig` alone, never of the
+    calibration graph, so a plan warmed against a placeholder calibration
+    replays warm against every real one.
 """
 from __future__ import annotations
 
@@ -15,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import layers, masks
+from . import effop, layers, masks
 from .graph import PaddedGraph
 from .layers import Techniques
 from .quant import QuantizedLinear, quantize_linear
@@ -142,8 +164,11 @@ def stack_operands(ops: Sequence[GranniteOperands]) -> GranniteOperands:
     """Stack per-graph operands into one batched (B, ...) operand set.
 
     Batched plans execute vmapped, so every field gains a leading batch dim.
-    GraSp / QuantGr operands are per-graph compile-time structures and have
-    no batched form — the engine runs those single-graph.
+    GraSp block structures and the per-graph OFFLINE QuantGr form
+    (`ops.quant`, from `calibrate_quant`) have no batched shape — the engine
+    runs those single-graph. Serving-tier QuantGr does not hit this limit:
+    its calibration is model-level and rides the plan's broadcast `quant`
+    argument, never the operands (DESIGN.md §8).
     """
     if any(o.block_sparse is not None or o.quant is not None for o in ops):
         raise ValueError("block_sparse/quant operands cannot be batched")
@@ -356,30 +381,173 @@ def calibrate_quant(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
             "agg2": quantize_agg(ops_.norm_adj, pre2)}
 
 
+@dataclasses.dataclass
+class TierOperands:
+    """Per-(graph, tier) DERIVED operands (DESIGN.md §8).
+
+    Today this is GCN's int8 aggregation form: Â quantized per-row ONCE per
+    structure version, then cached device-resident next to the fp32 operand
+    set it was derived from. The point is byte traffic, not math: the int8
+    plan reads 1-byte Â rows instead of re-reading (and re-quantizing) the
+    4-byte fp32 Â every query — on the NPU this is exactly the state CacheG
+    keeps SRAM-resident. GAT/SAGE tiers need no per-graph derivation (their
+    QuantGr state is model-level weights), so they pass None.
+    """
+    agg_aq: jnp.ndarray        # (cap, cap) int8 row-quantized Â
+    agg_a_scale: jnp.ndarray   # (cap, 1) float32 per-row scales
+
+
+jax.tree_util.register_pytree_node(
+    TierOperands,
+    lambda o: ((o.agg_aq, o.agg_a_scale), None),
+    lambda _, c: TierOperands(*c))
+
+
+def derive_tier_operands(norm_adj: jnp.ndarray) -> TierOperands:
+    """Device side of the tier-operand derivation: row-quantize one fp32 Â
+    (`quantize_rowwise` — the same rounding rule as every other QuantGr agg
+    path). Pure jnp; the serving engine jits it per bucket
+    (`build_agg_quantizer`) and caches the result per structure version."""
+    from .quant import quantize_rowwise
+    aq, a_scale = quantize_rowwise(norm_adj)
+    return TierOperands(agg_aq=aq, agg_a_scale=a_scale)
+
+
+def stack_tier_operands(tos: Sequence[TierOperands]) -> TierOperands:
+    """Stack per-graph tier operands for one vmapped batched dispatch."""
+    return TierOperands(agg_aq=jnp.stack([t.agg_aq for t in tos]),
+                        agg_a_scale=jnp.stack([t.agg_a_scale for t in tos]))
+
+
+@dataclasses.dataclass
+class AggQuantizer:
+    """The jitted tier-operand deriver, with the same trace accounting as
+    ExecutionPlan / OperandMaterializer: jit specializes on Â's shape, so
+    `trace_count` is the number of buckets compiled — GraphServe warms them
+    in `warmup()` and folds the count into the zero-recompile contract."""
+    fn: Callable = dataclasses.field(default=None, repr=False)
+    trace_count: int = 0
+
+    def __call__(self, norm_adj: jnp.ndarray) -> TierOperands:
+        return self.fn(norm_adj)
+
+
+def build_agg_quantizer() -> AggQuantizer:
+    q = AggQuantizer()
+
+    def _derive(norm_adj):
+        q.trace_count += 1                # python side effect: traces only
+        return derive_tier_operands(norm_adj)
+
+    q.fn = jax.jit(_derive)
+    return q
+
+
+def calibrate_tier(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
+                   ops_: GranniteOperands) -> Dict:
+    """Model-level QuantGr calibration for one serving tier (all kinds).
+
+    Unlike `calibrate_quant` (whose QuantizedAgg bakes ONE graph's Â into
+    int8 — the right thing for a paper table, useless to a multi-graph
+    plan), the returned pytree carries only model-shaped state: per-layer
+    QuantizedLinear weights plus, for GCN, the static aggregation
+    activation scales. One calibration therefore serves every graph of the
+    model — the per-graph int8 Â is a separate DERIVED operand the engine
+    quantizes once per structure version (`derive_tier_operands`, cached
+    device-resident) and feeds to the plan as `tier_ops`; in-trace
+    derivation (`quantize_agg_dynamic`) remains only as the fallback for
+    one-shot/eager calls. Runs one fp32 forward over the calibration
+    features to record absmax ranges (static scales, never re-derived at
+    query time).
+    """
+    if cfg.kind == "gcn":
+        # same math as calibrate_quant minus its QuantizedAgg construction
+        # (which row-quantizes the full (cap, cap) Â twice only for the
+        # scalar h_scales to survive — serving derives the int8 Â per
+        # structure version instead, derive_tier_operands)
+        from .quant import calibrate_absmax
+        pre1 = x @ params["l1"]["w"]
+        h1 = jax.nn.relu(layers.gcn_grannite(params["l1"], x, ops_.norm_adj,
+                                             Techniques(stagr=True)))
+        pre2 = h1 @ params["l2"]["w"]
+        return {"l1": quantize_linear(params["l1"]["w"], x),
+                "l2": quantize_linear(params["l2"]["w"], h1),
+                "agg1_h": calibrate_absmax(pre1).scale,
+                "agg2_h": calibrate_absmax(pre2).scale}
+    if cfg.kind == "gat":
+        per_head = cfg.hidden // cfg.heads
+        h1 = jax.nn.elu(layers.gat_grannite(
+            params["l1"], x, ops_.mask_mult, ops_.bias_add,
+            Techniques(effop=True), heads=cfg.heads, out_feats=per_head))
+        return {"l1": quantize_linear(params["l1"]["w"], x),
+                "l2": quantize_linear(params["l2"]["w"], h1)}
+    if cfg.kind == "sage":
+        t0 = Techniques(effop=True)
+
+        def _layer(p, xin):
+            if cfg.aggregator == "max":
+                pooled = jax.nn.relu(xin @ p["w_pool"] + p["b_pool"])
+                agg = effop.masked_max_aggregate(pooled, ops_.sample_mask,
+                                                 grax3=False)
+            else:
+                agg = ops_.mean_mask @ xin
+            ql = {"self": quantize_linear(p["w_self"], xin),
+                  "neigh": quantize_linear(p["w_neigh"], agg)}
+            if "w_pool" in p:
+                ql["pool"] = quantize_linear(p["w_pool"], xin)
+            return ql
+
+        q1 = _layer(params["l1"], x)
+        h1 = jax.nn.relu(layers.sage_grannite(
+            params["l1"], x, ops_.sample_mask, ops_.mean_mask, t0,
+            aggregator=cfg.aggregator))
+        return {"l1": q1, "l2": _layer(params["l2"], h1)}
+    raise ValueError(cfg.kind)
+
+
 def forward_grannite(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
-                     ops_: GranniteOperands, t: Techniques) -> jnp.ndarray:
+                     ops_: GranniteOperands, t: Techniques,
+                     quant: Optional[Dict] = None,
+                     tier_ops: Optional[TierOperands] = None) -> jnp.ndarray:
+    """One dense GraNNite forward. `quant` is the model-level tier
+    calibration from `calibrate_tier` (serving tiers); `ops_.quant` is the
+    per-graph offline form from `calibrate_quant` (paper tables). When both
+    are present the per-graph form wins — it is the more faithful one.
+    `tier_ops` carries the per-graph DERIVED tier operands (GCN's cached
+    int8 Â); without it a QuantGr GCN forward derives the int8 Â in-trace.
+    """
+    tq = (quant or {}) if t.quantgr else {}
     if cfg.kind == "gcn":
         q = ops_.quant or {}
+        taq = tier_ops.agg_aq if tier_ops is not None else None
+        tas = tier_ops.agg_a_scale if tier_ops is not None else None
         h = jax.nn.relu(layers.gcn_grannite(
-            params["l1"], x, ops_.norm_adj, t, quant=q.get("l1"),
-            quant_agg=q.get("agg1"), block_sparse=ops_.block_sparse))
+            params["l1"], x, ops_.norm_adj, t,
+            quant=q.get("l1") or tq.get("l1"),
+            quant_agg=q.get("agg1"), agg_h_scale=tq.get("agg1_h"),
+            tier_aq=taq, tier_a_scale=tas,
+            block_sparse=ops_.block_sparse))
         return layers.gcn_grannite(params["l2"], h, ops_.norm_adj, t,
-                                   quant=q.get("l2"),
+                                   quant=q.get("l2") or tq.get("l2"),
                                    quant_agg=q.get("agg2"),
+                                   agg_h_scale=tq.get("agg2_h"),
+                                   tier_aq=taq, tier_a_scale=tas,
                                    block_sparse=ops_.block_sparse)
     if cfg.kind == "gat":
         per_head = cfg.hidden // cfg.heads
         h = jax.nn.elu(layers.gat_grannite(
             params["l1"], x, ops_.mask_mult, ops_.bias_add, t,
-            heads=cfg.heads, out_feats=per_head))
+            heads=cfg.heads, out_feats=per_head, quant=tq.get("l1")))
         return layers.gat_grannite(params["l2"], h, ops_.mask_mult, ops_.bias_add,
-                                   t, heads=1, out_feats=cfg.num_classes)
+                                   t, heads=1, out_feats=cfg.num_classes,
+                                   quant=tq.get("l2"))
     if cfg.kind == "sage":
         h = jax.nn.relu(layers.sage_grannite(
             params["l1"], x, ops_.sample_mask, ops_.mean_mask, t,
-            aggregator=cfg.aggregator))
+            aggregator=cfg.aggregator, quant=tq.get("l1")))
         return layers.sage_grannite(params["l2"], h, ops_.sample_mask,
-                                    ops_.mean_mask, t, aggregator=cfg.aggregator)
+                                    ops_.mean_mask, t, aggregator=cfg.aggregator,
+                                    quant=tq.get("l2"))
     raise ValueError(cfg.kind)
 
 
@@ -405,7 +573,10 @@ class ExecutionPlan:
     zero-recompile contract is asserted against the compiler, not our own
     bookkeeping. Params are runtime arguments (never closed over), so `key`
     is the full identity of the compiled blob: models sharing (cfg,
-    capacity, batch, techniques) can legitimately share one plan.
+    capacity, batch, techniques) can legitimately share one plan. A quality
+    tier (DESIGN.md §8) is a Techniques variant, so tiers get their own
+    plans through the same key — and tiers that alias the same Techniques
+    (GCN's int8 vs int8+grax) share one blob.
     """
     cfg: GNNConfig
     techniques: Techniques
@@ -418,9 +589,10 @@ class ExecutionPlan:
     def key(self) -> PlanKey:
         return (self.cfg, self.capacity, self.batch_size, self.techniques)
 
-    def __call__(self, params: Dict, x: jnp.ndarray,
-                 ops_: GranniteOperands) -> jnp.ndarray:
-        return self.fn(params, x, ops_)
+    def __call__(self, params: Dict, x: jnp.ndarray, ops_: GranniteOperands,
+                 quant: Optional[Dict] = None,
+                 tier_ops: Optional[TierOperands] = None) -> jnp.ndarray:
+        return self.fn(params, x, ops_, quant, tier_ops)
 
 
 def build_plan(cfg: GNNConfig, capacity: int, t: Techniques, *,
@@ -428,17 +600,26 @@ def build_plan(cfg: GNNConfig, capacity: int, t: Techniques, *,
     """Compile-on-first-call plan for (cfg.kind, capacity, t).
 
     batch_size > 0 builds the batched executor: x is (B, cap, F) and every
-    operand field carries a leading B dim (see stack_operands).
+    operand field carries a leading B dim (see stack_operands); the
+    model-level `quant` calibration broadcasts (in_axes=None), exactly like
+    params, while the per-graph `tier_ops` are batched like the operands
+    (stack_tier_operands). Call discipline for warmth: a plan whose
+    Techniques enable QuantGr must ALWAYS be called with a calibration
+    pytree (placeholder or real — same structure either way, see
+    `calibrate_tier`) and, for GCN, with TierOperands; a non-QuantGr plan
+    with None for both. Flipping between None and a pytree changes the
+    trace structure and would recompile.
     """
     plan = ExecutionPlan(cfg=cfg, techniques=t, capacity=capacity,
                          batch_size=batch_size)
 
-    def _forward(params, x, ops_):
+    def _forward(params, x, ops_, quant, tier_ops):
         plan.trace_count += 1                 # python side effect: traces only
-        return forward_grannite(params, cfg, x, ops_, t)
+        return forward_grannite(params, cfg, x, ops_, t, quant=quant,
+                                tier_ops=tier_ops)
 
     if batch_size > 0:
-        plan.fn = jax.jit(jax.vmap(_forward, in_axes=(None, 0, 0)))
+        plan.fn = jax.jit(jax.vmap(_forward, in_axes=(None, 0, 0, None, 0)))
     else:
         plan.fn = jax.jit(_forward)
     return plan

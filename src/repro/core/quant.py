@@ -9,6 +9,25 @@ Paper semantics reproduced exactly:
 
 Calibration = run FP32 forward over calibration inputs, record absmax per
 tensor (activations: per-tensor; weights: per-output-channel).
+
+Module contracts (what callers may rely on):
+
+  * Pytree registration — `QParams`, `QuantizedLinear`, and `QuantizedAgg`
+    are registered jax pytrees whose LEAVES are the quantized arrays and
+    scales. They cross jit/vmap boundaries as runtime arguments, so a
+    serving plan traced once against a calibration pytree replays warm for
+    every later calibration of the same model shape (the zero-recompile
+    contract, DESIGN.md §3/§8). Nothing in here is ever a static jit arg.
+  * Static scales — every `*_scale` is fixed at calibration time. Runtime
+    code quantizes activations with a stored scale; it never re-derives
+    activation ranges (the paper's "static" claim). The ONE exception is
+    `quantize_agg_dynamic`: Â is graph *structure*, not an activation, so
+    its per-row scales are a deterministic function of an operand the
+    serving cache already holds and may be re-derived in-trace without
+    violating static-ness (DESIGN.md §8).
+  * Numerics — `quantized_matmul_ref` / `apply_quantized_agg` are the
+    INT8×INT8→INT32→FP32 oracles; the Pallas kernel path (`use_kernel`)
+    must match them bit-for-bit on tile-aligned shapes (tests/test_kernels).
 """
 from __future__ import annotations
 
@@ -51,9 +70,14 @@ def dequantize(xq: jnp.ndarray, q: QParams) -> jnp.ndarray:
 
 def quantized_matmul_ref(xq: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray,
                          sw: jnp.ndarray) -> jnp.ndarray:
-    """INT8 x INT8 -> INT32 accumulate -> FP32 rescale (pure-jnp oracle)."""
-    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32),
-                     preferred_element_type=jnp.int32)
+    """INT8 x INT8 -> INT32 accumulate -> FP32 rescale (pure-jnp oracle).
+
+    The int8 operands feed the dot DIRECTLY (preferred_element_type does
+    the s32 accumulation): an explicit astype(int32) first would bake 4x
+    operand copies into the HLO — an artifact no int8 datapath pays, and
+    one the roofline model (benchmarks.tpu_model) would mis-price.
+    """
+    acc = jnp.matmul(xq, wq, preferred_element_type=jnp.int32)
     return acc.astype(jnp.float32) * (sx * sw)
 
 
@@ -115,6 +139,41 @@ def quantize_agg(norm_adj: jnp.ndarray, calib_h: jnp.ndarray) -> QuantizedAgg:
                         h_scale=calibrate_absmax(calib_h).scale)
 
 
+def quantize_rowwise(a: jnp.ndarray):
+    """Per-row symmetric INT8 quantization -> (aq, a_scale).
+
+    The Â half of QuantGr aggregation (rows are normalized neighborhoods),
+    shared by the offline (`quantize_agg`), in-trace
+    (`quantize_agg_dynamic`), and serving tier-derived
+    (`core.models.derive_tier_operands`) paths — one rounding rule, so all
+    three produce bit-identical int8 Â for the same input. Pure jnp.
+    """
+    amax = jnp.maximum(jnp.max(jnp.abs(a), axis=-1, keepdims=True), 1e-8)
+    a_scale = amax / INT8_MAX
+    aq = jnp.clip(jnp.round(a / a_scale), -INT8_MAX, INT8_MAX
+                  ).astype(jnp.int8)
+    return aq, a_scale
+
+
+def quantize_agg_dynamic(norm_adj: jnp.ndarray,
+                         h_scale: jnp.ndarray) -> QuantizedAgg:
+    """Derive Â's QuantizedAgg form *inside the trace*.
+
+    `quantize_agg` bakes one graph's int8 Â offline, which is useless to a
+    multi-graph serving plan. Â is structure, not activation: its per-row
+    scales are a deterministic function of the fp32 operand, so deriving
+    them in-trace does not violate QuantGr's static-scale contract — only
+    the activation scale `h_scale` is calibration state. The serving
+    engine goes one step further and CACHES the derived form per structure
+    version (DESIGN.md §8: `derive_tier_operands`), because re-quantizing
+    an unchanged Â every query re-reads the 4× fp32 bytes the int8 form
+    exists to avoid; this in-trace path remains for one-shot/eager calls.
+    Numerics match `quantize_agg` exactly for the same Â.
+    """
+    aq, a_scale = quantize_rowwise(norm_adj)
+    return QuantizedAgg(aq=aq, a_scale=a_scale, h_scale=h_scale)
+
+
 def apply_quantized_agg(qa: QuantizedAgg, h: jnp.ndarray,
                         *, use_kernel: bool = False) -> jnp.ndarray:
     hq = jnp.clip(jnp.round(h / qa.h_scale), -INT8_MAX, INT8_MAX
@@ -123,8 +182,7 @@ def apply_quantized_agg(qa: QuantizedAgg, h: jnp.ndarray,
         from repro.kernels import ops as kops
         out = kops.int8_matmul(qa.aq, hq, 1.0, jnp.ones(h.shape[1]))
         return out * (qa.a_scale * qa.h_scale)
-    acc = jnp.matmul(qa.aq.astype(jnp.int32), hq.astype(jnp.int32),
-                     preferred_element_type=jnp.int32)
+    acc = jnp.matmul(qa.aq, hq, preferred_element_type=jnp.int32)
     return acc.astype(jnp.float32) * (qa.a_scale * qa.h_scale)
 
 

@@ -30,11 +30,37 @@ of *graphs* — the paper's actual workload:
     buffers. `update()` bumps the version and re-materializes once.
     Directed GCN/GAT graphs fall back to the eager dense upload (counted as
     `cacheg_fallbacks`) — same plans, no extra traces.
+  * Quality tiers (DESIGN.md §8) — every registered model carries a tier
+    registry mapping tier names to `Techniques` variants (standard ladder:
+    `fp32` exact / `int8` QuantGr / `int8+grax` QuantGr + the kind's GrAx
+    approximations). A tier is just another ExecutionPlan: requests pick
+    one per call (`query(gid, tier="int8")`), QuantGr tiers carry a
+    model-level calibration (`calibrate_tier`) as the plan's broadcast
+    runtime argument, and an uncalibrated quant tier serves through fp32
+    (counted as `tier_fallbacks`) rather than erroring. Calibration runs
+    once per (model, tier) — on the first `attach()` or an explicit
+    `calibrate()` — and also measures `accuracy_delta_vs_fp32` on the
+    held-out part of the calibration graph.
 
-Zero-recompile contract: after `warmup()`, `assert_warm()` holds however
-many mixed-size requests arrive, as long as no graph climbs the ladder.
-The materializer's jit traces (one per bucket × operand-fieldset, all
-compiled in `warmup()`) are folded into the same contract.
+Engine contracts (what tests and operators may rely on):
+
+  * Zero-recompile — after `warmup()`, `assert_warm()` holds however many
+    mixed-size, mixed-TIER requests arrive, as long as no graph climbs the
+    ladder. Warmup compiles every (model, bucket, tier) plan — quant-tier
+    plans against a placeholder calibration whose pytree structure equals
+    any real one (calibration shapes are model-level, see core.models) —
+    plus one CacheG materializer trace per (bucket, operand-fieldset).
+  * Cache keys — both operand caches are keyed by (graph_id,
+    structure_version) and NOTHING else. The primary cache holds the
+    tier-agnostic fp32 operands every tier shares; the tier cache holds
+    forms DERIVED from that same version (GCN's int8 Â, quantized once per
+    version so the int8 plan reads 1-byte rows instead of re-quantizing
+    4-byte fp32 every query). `update()` bumping the version is the only
+    invalidation path for both.
+  * Plan identity — plans are keyed by (cfg, bucket, batch, Techniques):
+    tenants sharing a config share blobs, and tier names that alias the
+    same Techniques (GCN int8 vs int8+grax) share too. Tier names are a
+    serving-policy concept; the compiler only ever sees Techniques.
 """
 from __future__ import annotations
 
@@ -50,18 +76,67 @@ from repro.core.graph import (BucketLadder, Graph, PaddedGraph,
                               stack_padded)
 from repro.core.layers import Techniques
 from repro.core.models import (ExecutionPlan, GNNConfig, GranniteOperands,
-                               PlanKey, build_materializer, build_operands,
-                               build_plan, compact_operands, init_params,
-                               operand_nbytes, stack_operands)
+                               PlanKey, TierOperands, build_agg_quantizer,
+                               build_materializer, build_operands, build_plan,
+                               calibrate_tier, compact_operands,
+                               derive_tier_operands, forward_grannite,
+                               init_params, operand_nbytes, stack_operands,
+                               stack_tier_operands)
 
-# Per-kind serving techniques: the full dense-path stacks minus GraSp /
-# QuantGr, whose operands are per-graph compile-time structures with no
-# batched (vmapped) form — see stack_operands.
+# Per-kind serving techniques for models registered WITHOUT a tier ladder:
+# the full dense-path stacks minus GraSp (whose block structures have no
+# batched form — see stack_operands; QuantGr is tier-servable via the
+# model-level calibration path, DESIGN.md §8).
 DEFAULT_TECHNIQUES: Dict[str, Techniques] = {
     "gcn": Techniques(stagr=True, grad_dynamic=True, graphsplit=True),
     "gat": Techniques.full_gat(),
     "sage": Techniques.full_sage(),
 }
+
+STANDARD_TIERS = ("fp32", "int8", "int8+grax")
+
+
+def tier_techniques(kind: str) -> Dict[str, Techniques]:
+    """The standard quality-tier registry for one model kind (DESIGN.md §8).
+
+    `fp32` is the exact dense serving path — no approximation, the accuracy
+    reference every other tier's delta is measured against. `int8` switches
+    the combine matmuls (and, for GCN, the Â aggregation) to QuantGr.
+    `int8+grax` adds the kind's GrAx approximations: GrAx1+GrAx2 for GAT
+    attention, GrAx3 for SAGE-max; GCN has no GrAx variant, so its
+    `int8+grax` aliases the int8 Techniques and shares its compiled plans.
+    """
+    fp32 = {"gcn": Techniques(stagr=True, grad_dynamic=True, graphsplit=True),
+            "gat": Techniques(stagr=True, graphsplit=True, effop=True),
+            "sage": Techniques(stagr=True, graphsplit=True, effop=True)}[kind]
+    int8 = dataclasses.replace(fp32, quantgr=True)
+    grax = {"gcn": int8,
+            "gat": dataclasses.replace(int8, grax1=True, grax2=True),
+            "sage": dataclasses.replace(int8, grax3=True)}[kind]
+    return {"fp32": fp32, "int8": int8, "int8+grax": grax}
+
+
+def _delta_points(base_logits, tier_logits, pg: PaddedGraph) -> float:
+    """`accuracy_delta_vs_fp32` in percentage points, on the held-out batch.
+
+    Labeled calibration graphs score top-1 accuracy on `test_mask` (the
+    held-out split; falls back to all labeled nodes when no mask exists);
+    unlabeled ones fall back to argmax agreement with the fp32 tier, shifted
+    so 0.0 still reads "identical predictions" and negative "divergence".
+    """
+    n = pg.num_nodes
+    bp = np.asarray(base_logits)[:n].argmax(-1)
+    tp = np.asarray(tier_logits)[:n].argmax(-1)
+    if pg.labels is not None:
+        labels = np.asarray(pg.labels)[:n]
+        mask = labels >= 0
+        if pg.test_mask is not None and np.asarray(pg.test_mask)[:n].any():
+            mask = mask & np.asarray(pg.test_mask)[:n]
+        if mask.any():
+            acc_b = float((bp[mask] == labels[mask]).mean())
+            acc_t = float((tp[mask] == labels[mask]).mean())
+            return (acc_t - acc_b) * 100.0
+    return (float((tp == bp).mean()) - 1.0) * 100.0
 
 
 @dataclasses.dataclass
@@ -72,6 +147,8 @@ class GNNRequest:
     ops: GranniteOperands
     bucket: int
     submitted_s: float
+    tier: str = "fp32"                     # resolved tier (post-fallback)
+    tier_ops: Optional[TierOperands] = None  # derived (e.g. GCN int8 Â)
     finished_s: float = 0.0
     done: bool = False
     preds: Optional[np.ndarray] = None     # (num_nodes,) argmax classes
@@ -91,7 +168,17 @@ class GraphServeConfig:
 class _ModelEntry:
     cfg: GNNConfig
     params: Dict
-    techniques: Techniques
+    tiers: Dict[str, Techniques]           # tier name -> execution variant
+    default_tier: str
+    # once per (model, tier): calibrate_tier pytrees for QuantGr tiers, and
+    # the measured accuracy_delta_vs_fp32 for every non-fp32 tier
+    calibrations: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    accuracy_delta: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def techniques(self) -> Techniques:
+        """The default tier's Techniques (back-compat accessor)."""
+        return self.tiers[self.default_tier]
 
 
 class GraphServe:
@@ -104,10 +191,14 @@ class GraphServe:
         self.graphs: Dict[int, Tuple[str, PaddedGraph]] = {}
         self._plans: Dict[PlanKey, ExecutionPlan] = {}
         self._materializer = build_materializer()
+        self._agg_quantizer = build_agg_quantizer()
         # CacheG device-resident operand cache: (graph_id, structure_version)
         # -> materialized GranniteOperands living in device memory. update()
         # bumps the version and evicts, so stale structure can never serve.
+        # The tier cache holds DERIVED forms of the same version (GCN's int8
+        # Â) under the same key — same lifecycle, same invalidation.
         self._operand_cache: Dict[Tuple[int, int], GranniteOperands] = {}
+        self._tier_operand_cache: Dict[Tuple[int, int], TierOperands] = {}
         self._graph_version: Dict[int, int] = {}
         self._warm_blobs: Optional[int] = None
         self._uid = 0
@@ -116,41 +207,98 @@ class GraphServe:
                         "rebucket_events": 0, "latency_s": [],
                         "first_submit_s": None, "last_finish_s": None,
                         "operand_bytes_h2d": 0, "operand_cache_hits": 0,
-                        "operand_cache_misses": 0, "cacheg_fallbacks": 0}
+                        "operand_cache_misses": 0, "cacheg_fallbacks": 0,
+                        "tier_fallbacks": 0}
 
     # ------------------------------------------------------------------ setup
     def register_model(self, name: str, cfg: GNNConfig, params: Optional[Dict] = None,
-                       *, techniques: Optional[Techniques] = None) -> None:
+                       *, techniques: Optional[Techniques] = None,
+                       tiers=None, default_tier: str = "fp32") -> None:
+        """Register a model with its quality-tier registry.
+
+        `tiers` may be: None (single-tier registry {"fp32": techniques or
+        DEFAULT_TECHNIQUES}); a sequence of STANDARD_TIERS names (resolved
+        through `tier_techniques(cfg.kind)`); or a full {name: Techniques}
+        dict. The registry must always contain "fp32" — it is the accuracy
+        reference and the calibration-fallback target, not just a tier.
+        """
         import jax
         if params is None:
             params = init_params(jax.random.PRNGKey(self.seed), cfg)
-        t = techniques if techniques is not None else DEFAULT_TECHNIQUES[cfg.kind]
-        self.models[name] = _ModelEntry(cfg=cfg, params=params, techniques=t)
+        if tiers is None:
+            registry = {"fp32": techniques if techniques is not None
+                        else DEFAULT_TECHNIQUES[cfg.kind]}
+        else:
+            if techniques is not None:
+                raise ValueError(
+                    "pass per-tier Techniques inside `tiers`, not both "
+                    "`techniques` and `tiers`")
+            if isinstance(tiers, dict):
+                registry = dict(tiers)
+            else:
+                std = tier_techniques(cfg.kind)
+                unknown = [tn for tn in tiers if tn not in std]
+                if unknown:
+                    raise ValueError(
+                        f"unknown standard tier name(s) {unknown}; pick "
+                        f"from {sorted(std)} or pass a "
+                        f"{{name: Techniques}} dict")
+                registry = {tn: std[tn] for tn in tiers}
+        if "fp32" not in registry:
+            raise ValueError("tier registry must include 'fp32' (the "
+                             "accuracy reference / calibration fallback)")
+        if registry["fp32"].quantgr:
+            # the fallback tier must be servable UNCALIBRATED: a QuantGr
+            # fp32 tier would fall back to itself and execute its plan with
+            # quant=None, flipping the trace structure warmup compiled
+            raise ValueError("the 'fp32' tier cannot enable QuantGr — it "
+                             "is the uncalibrated-fallback path; register "
+                             "quantized variants under another tier name")
+        if default_tier not in registry:
+            raise ValueError(f"default tier {default_tier!r} not in "
+                             f"{sorted(registry)}")
+        self.models[name] = _ModelEntry(cfg=cfg, params=params,
+                                        tiers=registry,
+                                        default_tier=default_tier)
 
-    def plan_for(self, model: str, bucket: int) -> ExecutionPlan:
-        # keyed by the plan's full identity, not the model name: params are
-        # runtime args, so models registered with identical (cfg, techniques)
-        # share one compiled blob per bucket
+    def plan_for(self, model: str, bucket: int,
+                 tier: Optional[str] = None) -> ExecutionPlan:
+        # keyed by the plan's full identity, not the (model, tier) names:
+        # params and calibrations are runtime args, so models/tiers with
+        # identical (cfg, techniques) share one compiled blob per bucket
         e = self.models[model]
-        key: PlanKey = (e.cfg, bucket, self.sc.batch_slots, e.techniques)
+        t = e.tiers[tier if tier is not None else e.default_tier]
+        key: PlanKey = (e.cfg, bucket, self.sc.batch_slots, t)
         if key not in self._plans:
-            self._plans[key] = build_plan(e.cfg, bucket, e.techniques,
+            self._plans[key] = build_plan(e.cfg, bucket, t,
                                           batch_size=self.sc.batch_slots)
         return self._plans[key]
 
     @property
     def compiled_blobs(self) -> int:
         """Actual jit traces: all plans + the CacheG materializer (one trace
-        per bucket × operand-fieldset, compiled during warmup)."""
+        per bucket × operand-fieldset) + the tier-operand deriver (one per
+        bucket with a QuantGr GCN tier), all compiled during warmup."""
         return (sum(p.trace_count for p in self._plans.values())
-                + self._materializer.trace_count)
+                + self._materializer.trace_count
+                + self._agg_quantizer.trace_count)
 
     def warmup(self, *, buckets: Optional[Tuple[int, ...]] = None) -> int:
-        """Compile every (model, bucket) plan — and, with CacheG enabled,
-        every (bucket, fieldset) materializer — once with placeholder inputs.
+        """Compile every (model, bucket, tier) plan — and, with CacheG
+        enabled, every (bucket, fieldset) materializer — once with
+        placeholder inputs.
+
+        QuantGr tiers not yet calibrated warm against a THROWAWAY
+        calibration built from the placeholder graph: `calibrate_tier`'s
+        pytree structure depends only on the model config, so the trace
+        compiled here replays warm when the real calibration arrives — the
+        placeholder is never stored, and an uncalibrated tier still falls
+        back to fp32 at query time.
         """
         buckets = buckets if buckets is not None else self.sc.ladder.buckets
         b = self.sc.batch_slots
+        warm_cal: Dict[Tuple[str, str], Dict] = {}
+        warmed: set = set()
         for bucket in buckets:
             empty = pad_graph(Graph(edge_index=np.zeros((2, 0), np.int32),
                                     num_nodes=1,
@@ -166,8 +314,29 @@ class GraphServe:
                     single = build_operands(pg, e.cfg, lean=True)
                 ops = stack_operands([single] * b)
                 x = jnp.zeros((b, bucket, e.cfg.in_feats), jnp.float32)
-                out = self.plan_for(name, bucket)(e.params, x, ops)
-                out.block_until_ready()
+                for tier, t in e.tiers.items():
+                    # alias tiers (e.g. GCN int8+grax == int8) share a plan
+                    # AND a calibration structure — exercising them again
+                    # would just recompute placeholders for zero new traces
+                    plan = self.plan_for(name, bucket, tier)
+                    if (name, plan.key) in warmed:
+                        continue
+                    warmed.add((name, plan.key))
+                    quant = e.calibrations.get(tier)
+                    if quant is None and t.quantgr:
+                        if (name, tier) not in warm_cal:
+                            x1 = jnp.zeros((bucket, e.cfg.in_feats),
+                                           jnp.float32)
+                            warm_cal[(name, tier)] = calibrate_tier(
+                                e.params, e.cfg, x1, single)
+                        quant = warm_cal[(name, tier)]
+                    tops = None
+                    if self._needs_tier_ops(e, tier):
+                        # also warms the per-bucket tier-operand deriver
+                        tops = stack_tier_operands(
+                            [self._agg_quantizer(single.norm_adj)] * b)
+                    out = plan(e.params, x, ops, quant, tops)
+                    out.block_until_ready()
         self._warm_blobs = self.compiled_blobs
         return self._warm_blobs
 
@@ -177,6 +346,81 @@ class GraphServe:
         assert self.compiled_blobs == self._warm_blobs, (
             f"recompile after warmup: {self.compiled_blobs} traces vs "
             f"{self._warm_blobs} at warmup")
+
+    # ------------------------------------------------------------- calibration
+    def calibrate(self, model: str, g: Graph, *,
+                  force: bool = False) -> Dict[str, float]:
+        """Per-(model, tier) QuantGr calibration + quality audit.
+
+        Runs one fp32 forward over `g` to record each QuantGr tier's static
+        activation scales (`core.models.calibrate_tier`) — once per (model,
+        tier); re-calling with another graph is a true no-op unless
+        `force=True` (scales AND the audited deltas both keep their first
+        graph), because swapping scales mid-traffic would silently change
+        every tenant's numerics and re-auditing on a different graph would
+        silently change the advertised quality numbers. Every non-fp32
+        tier gets its `accuracy_delta_vs_fp32` measured against the fp32
+        tier on the held-out part of `g` (test_mask when labeled, argmax
+        agreement otherwise), in percentage points. Pure value work: no
+        new traces, `assert_warm()` still holds afterwards.
+        """
+        return self._calibrate(model, self.sc.ladder.pad(g), force=force)
+
+    def _calibrate(self, model: str, pg: PaddedGraph, *,
+                   force: bool = False) -> Dict[str, float]:
+        e = self.models[model]
+        x = jnp.asarray(pg.features)
+        ops = base = None
+        # alias tiers (equal Techniques, e.g. GCN int8+grax == int8) share
+        # one calibration pytree and one audit forward, like they share a plan
+        done_cal: Dict[Techniques, Dict] = {}
+        done_delta: Dict[Techniques, float] = {}
+        for tier, t in e.tiers.items():
+            if tier == "fp32" or (not force and tier in e.accuracy_delta
+                                  and (not t.quantgr
+                                       or tier in e.calibrations)):
+                continue
+            if t in done_delta:
+                if t.quantgr:
+                    e.calibrations[tier] = done_cal[t]
+                e.accuracy_delta[tier] = done_delta[t]
+                continue
+            if ops is None:
+                ops = build_operands(pg, e.cfg, lean=True)
+                base = forward_grannite(e.params, e.cfg, x, ops,
+                                        e.tiers["fp32"])
+            if t.quantgr:
+                if force or tier not in e.calibrations:
+                    e.calibrations[tier] = calibrate_tier(e.params, e.cfg,
+                                                          x, ops)
+                done_cal[t] = e.calibrations[tier]
+            out = forward_grannite(e.params, e.cfg, x, ops, t,
+                                   quant=e.calibrations.get(tier))
+            done_delta[t] = _delta_points(base, out, pg)
+            e.accuracy_delta[tier] = done_delta[t]
+        return dict(e.accuracy_delta)
+
+    def _resolve_tier(self, model: str, tier: Optional[str]) -> str:
+        """Requested tier -> served tier: model default when unspecified,
+        fp32 fallback (counted, never an error) for an uncalibrated QuantGr
+        tier — a tenant asking for int8 before anyone calibrated should get
+        correct-but-slower answers, not a 500."""
+        e = self.models[model]
+        tier = tier if tier is not None else e.default_tier
+        if tier not in e.tiers:
+            raise KeyError(f"model {model!r} has no tier {tier!r} "
+                           f"(registered: {sorted(e.tiers)})")
+        if e.tiers[tier].quantgr and tier not in e.calibrations:
+            self.metrics["tier_fallbacks"] += 1
+            return "fp32"
+        return tier
+
+    @staticmethod
+    def _needs_tier_ops(e: _ModelEntry, tier: str) -> bool:
+        """GCN QuantGr tiers consume a per-graph derived operand (the int8
+        Â); every other (kind, tier) passes None — consistently per plan,
+        so the trace structure never flips."""
+        return e.cfg.kind == "gcn" and e.tiers[tier].quantgr
 
     # ------------------------------------------------------------------ intake
     def _device_operands(self, model: str, pg: PaddedGraph) -> GranniteOperands:
@@ -198,30 +442,46 @@ class GraphServe:
         return ops
 
     def _enqueue(self, model: str, pg: PaddedGraph,
-                 ops: Optional[GranniteOperands] = None) -> int:
+                 ops: Optional[GranniteOperands] = None, *,
+                 tier: Optional[str] = None,
+                 tier_ops: Optional[TierOperands] = None,
+                 tier_resolved: bool = False) -> int:
         now = time.perf_counter()
-        req = GNNRequest(uid=self._uid, model=model, pg=pg,
-                         ops=ops if ops is not None
-                         else self._device_operands(model, pg),
-                         bucket=pg.capacity, submitted_s=now)
+        if not tier_resolved:
+            tier = self._resolve_tier(model, tier)
+        if ops is None:
+            ops = self._device_operands(model, pg)
+        if tier_ops is None and self._needs_tier_ops(self.models[model], tier):
+            # one-shot request: derive without caching (nothing to key on)
+            tier_ops = self._agg_quantizer(ops.norm_adj)
+        req = GNNRequest(uid=self._uid, model=model, pg=pg, ops=ops,
+                         bucket=pg.capacity, submitted_s=now,
+                         tier=tier, tier_ops=tier_ops)
         self._uid += 1
         if self.metrics["first_submit_s"] is None:
             self.metrics["first_submit_s"] = now
         self.queue.append(req)
         return req.uid
 
-    def submit(self, g: Graph, *, model: str) -> int:
+    def submit(self, g: Graph, *, model: str,
+               tier: Optional[str] = None) -> int:
         """One-shot inference request over a static graph."""
-        return self._enqueue(model, self.sc.ladder.pad(g))
+        return self._enqueue(model, self.sc.ladder.pad(g), tier=tier)
 
-    def attach(self, g: Graph, *, model: str) -> int:
+    def attach(self, g: Graph, *, model: str, calibrate: bool = True) -> int:
         """Register an evolving graph; returns a graph_id for update/query.
 
         Operands materialize lazily on the first `query()` and stay cached
-        on device until `update()` changes the structure."""
+        on device until `update()` changes the structure. The first attach
+        to a model with uncalibrated non-fp32 tiers also runs the (model,
+        tier) calibration on this graph (`calibrate=False` to defer to an
+        explicit `calibrate()` call)."""
+        pg = self.sc.ladder.pad(g)
+        if calibrate:
+            self._calibrate(model, pg)      # no-op once (model, tier) is done
         gid = self._gid
         self._gid += 1
-        self.graphs[gid] = (model, self.sc.ladder.pad(g))
+        self.graphs[gid] = (model, pg)
         self._graph_version[gid] = 0
         return gid
 
@@ -229,13 +489,15 @@ class GraphServe:
         """Release an attached graph and its device-resident operands.
 
         The cache pins O(cap²) float32 per attached graph in device memory
-        (~32 MB for GAT at cap=2048) — long-running multi-tenant servers
-        must detach graphs they stop serving, or the cache grows without
-        bound (there is deliberately no silent LRU: evicting a live tenant's
-        operands would turn its next query into a surprise re-materialize).
+        (~32 MB for GAT at cap=2048), plus O(cap²) int8 per graph that took
+        a QuantGr GCN tier — long-running multi-tenant servers must detach
+        graphs they stop serving, or the cache grows without bound (there
+        is deliberately no silent LRU: evicting a live tenant's operands
+        would turn its next query into a surprise re-materialize).
         """
-        self._operand_cache.pop(
-            (graph_id, self._graph_version.pop(graph_id, -1)), None)
+        key = (graph_id, self._graph_version.pop(graph_id, -1))
+        self._operand_cache.pop(key, None)
+        self._tier_operand_cache.pop(key, None)
         self.graphs.pop(graph_id, None)
 
     def update(self, graph_id: int, edge_index: np.ndarray, num_nodes: int,
@@ -250,20 +512,26 @@ class GraphServe:
         self.graphs[graph_id] = (model, pg)
         ver = self._graph_version[graph_id]
         self._operand_cache.pop((graph_id, ver), None)
+        self._tier_operand_cache.pop((graph_id, ver), None)
         self._graph_version[graph_id] = ver + 1
         if rebucketed:
             self.metrics["rebucket_events"] += 1
         return rebucketed
 
-    def query(self, graph_id: int) -> int:
-        """Enqueue inference over an attached graph's current snapshot.
+    def query(self, graph_id: int, *, tier: Optional[str] = None) -> int:
+        """Enqueue inference over an attached graph's current snapshot,
+        optionally pinning a quality tier (model default otherwise).
 
         CacheG hit path: an unchanged structure serves straight from the
         device-resident cache — zero host-side operand construction, zero
-        operand bytes over the link."""
+        operand bytes over the link. The cache keys carry NO tier: the
+        same fp32 operands feed every tier's plan, and the int8 Â that
+        QuantGr GCN tiers read is quantized from them once per structure
+        version into the tier cache below — so mixed-tier traffic over one
+        graph shares one entry of each."""
         model, pg = self.graphs[graph_id]
         if not self.sc.use_cacheg:
-            return self._enqueue(model, pg)
+            return self._enqueue(model, pg, tier=tier)
         key = (graph_id, self._graph_version[graph_id])
         ops = self._operand_cache.get(key)
         if ops is None:
@@ -272,7 +540,17 @@ class GraphServe:
             self._operand_cache[key] = ops
         else:
             self.metrics["operand_cache_hits"] += 1
-        return self._enqueue(model, pg, ops)
+        tops = None
+        resolved = self._resolve_tier(model, tier)
+        if self._needs_tier_ops(self.models[model], resolved):
+            # derived-form hit path: the int8 Â is structure work too —
+            # once per (graph, version), never per query
+            tops = self._tier_operand_cache.get(key)
+            if tops is None:
+                tops = self._agg_quantizer(ops.norm_adj)
+                self._tier_operand_cache[key] = tops
+        return self._enqueue(model, pg, ops, tier=resolved, tier_ops=tops,
+                             tier_resolved=True)
 
     # --------------------------------------------------------------- execution
     def run(self) -> List[GNNRequest]:
@@ -282,9 +560,11 @@ class GraphServe:
 
     def _run_batch(self) -> None:
         head = self.queue[0]
-        key = (head.model, head.bucket)
+        # tier is part of the batch key: tiers are different compiled plans,
+        # so a slot can never mix execution variants
+        key = (head.model, head.bucket, head.tier)
         batch = [r for r in self.queue
-                 if (r.model, r.bucket) == key][: self.sc.batch_slots]
+                 if (r.model, r.bucket, r.tier) == key][: self.sc.batch_slots]
         taken = {r.uid for r in batch}
         self.queue = [r for r in self.queue if r.uid not in taken]
 
@@ -297,7 +577,10 @@ class GraphServe:
         # stack is a device-side concat — only the activations `x` crossed
         # the host→device link for this dispatch (DESIGN.md §7).
         ops = stack_operands([r.ops for r in slots])
-        logits = self.plan_for(head.model, head.bucket)(e.params, x, ops)
+        tops = (stack_tier_operands([r.tier_ops for r in slots])
+                if slots[0].tier_ops is not None else None)
+        logits = self.plan_for(head.model, head.bucket, head.tier)(
+            e.params, x, ops, e.calibrations.get(head.tier), tops)
         logits.block_until_ready()
 
         now = time.perf_counter()
@@ -317,6 +600,26 @@ class GraphServe:
         self.metrics["last_finish_s"] = now
 
     # ---------------------------------------------------------------- metrics
+    def tier_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-tier serving stats, derived from the finished requests (each
+        carries its RESOLVED tier, so fp32 fallbacks count as fp32 here and
+        as `tier_fallbacks` in the top-level metrics)."""
+        by_tier: Dict[str, List[GNNRequest]] = {}
+        for r in self.finished:
+            by_tier.setdefault(r.tier, []).append(r)
+        out: Dict[str, Dict[str, float]] = {}
+        for tn, reqs in sorted(by_tier.items()):
+            lat = np.asarray([r.finished_s - r.submitted_s for r in reqs])
+            span = (max(r.finished_s for r in reqs)
+                    - min(r.submitted_s for r in reqs))
+            out[tn] = {
+                "requests": len(reqs),
+                "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+                "throughput_rps": (len(reqs) / span) if span > 0 else 0.0,
+            }
+        return out
+
     def summary(self) -> Dict[str, object]:
         lat = np.asarray(self.metrics["latency_s"], np.float64)
         t0, t1 = self.metrics["first_submit_s"], self.metrics["last_finish_s"]
@@ -332,6 +635,11 @@ class GraphServe:
             "operand_cache_hits": self.metrics["operand_cache_hits"],
             "operand_cache_misses": self.metrics["operand_cache_misses"],
             "cacheg_fallbacks": self.metrics["cacheg_fallbacks"],
+            "tier_fallbacks": self.metrics["tier_fallbacks"],
+            "tiers": self.tier_summary(),
+            "accuracy_delta_vs_fp32": {
+                name: dict(e.accuracy_delta)
+                for name, e in self.models.items() if e.accuracy_delta},
             "throughput_rps": (len(self.finished) / span if span > 0 else 0.0),
             "p50_latency_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
             "p99_latency_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,

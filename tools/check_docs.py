@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Docs-consistency check (CI gate).
+
+Two classes of documentation rot this repo has already paid for once
+(DESIGN.md §6's stale "only non-default path" claim; the pre-GraphServe
+README) are made mechanical failures:
+
+  1. Section citations — every ``DESIGN.md §N`` reference in the source
+     tree (code comments, docstrings, markdown) must resolve to an actual
+     ``## §N`` heading in DESIGN.md. Renumbering sections without a sweep
+     breaks CI, which is the point: DESIGN.md promises its numbers are
+     stable *because* they are cited.
+  2. README techniques glossary — every backticked ``path.py:symbol``
+     entry point must name an existing file containing that symbol, every
+     bare backticked code symbol must still exist under src/, and all 13
+     paper techniques must have a glossary row.
+
+Run from the repo root: ``python tools/check_docs.py`` (exit 1 on any
+dangling reference; no dependencies beyond the stdlib).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+TECHNIQUES = ("GraphSplit", "StaGr", "GrAd", "NodePad", "EffOp", "GraSp",
+              "PreG", "SymG", "CacheG", "QuantGr", "GrAx1", "GrAx2", "GrAx3")
+
+SECTION_RE = re.compile(r"^## §([0-9A-Za-z-]+)", re.M)
+CITATION_RE = re.compile(r"DESIGN\.md\s*§([0-9A-Za-z-]+)")
+ENTRYPOINT_RE = re.compile(r"`([\w/.-]+\.py):(\w+)`")
+BARE_SYMBOL_RE = re.compile(r"`([A-Za-z_][\w.]*)`")
+
+
+def _scan_files():
+    yield ROOT / "README.md"
+    yield ROOT / "DESIGN.md"
+    for d in SCAN_DIRS:
+        for p in sorted((ROOT / d).rglob("*")):
+            if p.suffix in (".py", ".md") and p.is_file():
+                yield p
+
+
+def check_design_citations(errors):
+    sections = set(SECTION_RE.findall((ROOT / "DESIGN.md").read_text()))
+    if not sections:
+        errors.append("DESIGN.md: no '## §N' sections found at all")
+        return
+    for path in _scan_files():
+        text = path.read_text()
+        for m in CITATION_RE.finditer(text):
+            if m.group(1) == "N":       # meta-mention of the citation FORM
+                continue
+            if m.group(1) not in sections:
+                line = text[: m.start()].count("\n") + 1
+                errors.append(
+                    f"{path.relative_to(ROOT)}:{line}: cites DESIGN.md "
+                    f"§{m.group(1)} but DESIGN.md has only "
+                    f"§{{{', '.join(sorted(sections))}}}")
+
+
+def _glossary_rows(readme: str, errors):
+    m = re.search(r"^## Techniques glossary\n(.*?)(?=^## |\Z)", readme,
+                  re.M | re.S)
+    if not m:
+        errors.append("README.md: '## Techniques glossary' section missing")
+        return []
+    return [ln for ln in m.group(1).splitlines()
+            if ln.startswith("|") and not set(ln) <= {"|", "-", " "}][1:]
+
+
+def check_readme_glossary(errors):
+    readme = (ROOT / "README.md").read_text()
+    rows = _glossary_rows(readme, errors)
+    if not rows:
+        return
+    covered = " ".join(r.split("|")[1] for r in rows)
+    for tech in TECHNIQUES:
+        if not re.search(rf"\b{re.escape(tech)}\b", covered):
+            errors.append(f"README.md glossary: no row for technique {tech}")
+
+    src_text = "\n".join(p.read_text() for p in (ROOT / "src").rglob("*.py"))
+    for row in rows:
+        # path.py:symbol entry points → file exists and defines the symbol
+        for fpath, sym in ENTRYPOINT_RE.findall(row):
+            target = ROOT / fpath
+            if not target.is_file():
+                errors.append(f"README.md glossary: entry point file "
+                              f"{fpath} does not exist")
+            elif not re.search(rf"\b{re.escape(sym)}\b", target.read_text()):
+                errors.append(f"README.md glossary: {fpath} no longer "
+                              f"contains symbol {sym!r}")
+        # bare code symbols → last identifier still exists under src/
+        stripped = ENTRYPOINT_RE.sub("", row)
+        for token in BARE_SYMBOL_RE.findall(stripped):
+            leaf = token.split(".")[-1]
+            if not re.search(rf"\b{re.escape(leaf)}\b", src_text):
+                errors.append(f"README.md glossary: code symbol {token!r} "
+                              f"not found anywhere under src/")
+
+
+def main() -> int:
+    errors = []
+    check_design_citations(errors)
+    check_readme_glossary(errors)
+    if errors:
+        print(f"docs-consistency: {len(errors)} failure(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print("docs-consistency: DESIGN.md citations and README glossary OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
