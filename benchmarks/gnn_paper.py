@@ -496,6 +496,125 @@ def quality_tiers(dataset: str = "cora", *, epochs: int = 60,
     return rows
 
 
+def pipeline_overlap(dataset: str = "cora", *, n_requests: int = 24,
+                     batch_slots: int = 4, seed: int = 0) -> List[Dict]:
+    """Async two-stage pipeline scheduler vs synchronous `run()` (DESIGN.md
+    §9) under an ONLINE stream of mixed kind/bucket/tier requests.
+
+    Arrival model: requests become visible one at a time (an online server
+    cannot peek at future traffic). The sync driver is what bare
+    `submit()+run()` gives such a server — it pads, builds/packs operands,
+    then blocks on the device batch before touching the next request, so
+    (a) the device idles through every request's host work and (b) each
+    dispatch is a 1-of-`batch_slots` batch whose junk slots still pay full
+    width. The scheduler sees the SAME arrival order but overlaps host
+    workers with the device stage and lets the batch window coalesce
+    arrivals into fuller batches. Three rows: the online sync baseline,
+    the async pipeline, and an offline submit-all `run()` (the batching
+    upper bound no online scheduler can beat). Two claims, each against
+    the sync driver where it is meaningful: THROUGHPUT — async beats the
+    online `run()` baseline (batch window + overlap vs 1-of-N junk-width
+    batches); DEVICE IDLE — async's `device_idle_fraction` lands far
+    below the offline `run()`'s, whose device sits provably idle through
+    the entire host submit loop (the online driver's junk-slot batches
+    keep its device busy on WASTED width, so its idle fraction measures
+    waste, not overlap). Fresh identically-warmed engines each mode;
+    `assert_warm()` is enforced, so the win is scheduling, never
+    recompilation differences.
+    """
+    import time as _time
+
+    from repro.core.graph import BucketLadder
+    from repro.data.graphs import planetoid_like
+    from repro.runtime.gnn_server import GraphServe, GraphServeConfig
+    from repro.runtime.scheduler import PipelineConfig
+
+    in_feats, classes = 64, 7
+    rng = np.random.default_rng(seed)
+    cal = planetoid_like(num_nodes=200, num_edges=600, num_feats=in_feats,
+                         num_classes=classes, seed=seed + 10_000,
+                         train_per_class=5)
+    traffic = []
+    for i in range(n_requests):
+        kind = "gcn" if i % 2 == 0 else "gat"
+        n = int(rng.integers(300, 900))
+        tier = ("fp32", "int8")[int(rng.integers(2))] if kind == "gcn" else None
+        traffic.append((kind, tier, planetoid_like(
+            num_nodes=n, num_edges=3 * n, num_feats=in_feats,
+            num_classes=classes, seed=seed + i, train_per_class=2)))
+
+    def build():
+        sc = GraphServeConfig(ladder=BucketLadder(buckets=(512, 1024)),
+                              batch_slots=batch_slots)
+        eng = GraphServe(sc, seed=seed)
+        eng.register_model("gcn", GNNConfig(kind="gcn", in_feats=in_feats,
+                                            hidden=16, num_classes=classes),
+                           tiers=("fp32", "int8"))
+        eng.register_model("gat", GNNConfig(kind="gat", in_feats=in_feats,
+                                            hidden=16, num_classes=classes,
+                                            heads=4))
+        eng.warmup()
+        eng.calibrate("gcn", cal)               # int8 tier serves for real
+        return eng
+
+    def run_mode(eng, mode):
+        """One timed pass of the whole stream; returns (wall, idle, occ).
+        The engine stays warm across passes — only metric DELTAS over this
+        pass are read, so repeated passes measure scheduling, not state."""
+        m0 = (eng.metrics["device_busy_s"], eng.metrics["slots_filled"],
+              eng.metrics["slots_total"])
+        t0 = _time.perf_counter()
+        if mode == "sync":
+            for kind, tier, g in traffic:       # online: drain per arrival
+                eng.submit(g, model=kind, tier=tier)
+                eng.run()
+        elif mode == "offline":
+            for kind, tier, g in traffic:       # oracle: full future known
+                eng.submit(g, model=kind, tier=tier)
+            eng.run()
+        else:
+            pc = PipelineConfig(host_workers=2, window_ms=25.0,
+                                max_pending=n_requests,
+                                max_ready=n_requests)
+            with eng.scheduler(pc) as sched:
+                for kind, tier, g in traffic:
+                    sched.submit(g, model=kind, tier=tier)
+                sched.drain()
+        wall = _time.perf_counter() - t0
+        eng.assert_warm()                       # overlap, not recompiles
+        busy = eng.metrics["device_busy_s"] - m0[0]
+        occ = ((eng.metrics["slots_filled"] - m0[1])
+               / max(eng.metrics["slots_total"] - m0[2], 1))
+        return wall, max(0.0, 1.0 - busy / wall), occ
+
+    # this box is shared/noisy: interleave 3 reps across modes on
+    # persistently-warm engines and keep each mode's best pass, so one bad
+    # scheduling patch cannot decide the comparison
+    engines = {mode: build() for mode in ("sync", "async", "offline")}
+    stats = {}
+    for _ in range(3):
+        for mode, eng in engines.items():
+            res = run_mode(eng, mode)
+            if mode not in stats or res[0] < stats[mode][0]:
+                stats[mode] = res
+    rows = []
+    for mode, (wall, idle, occ) in stats.items():
+        rows.append(record(
+            f"pipeline_overlap/{mode}/{dataset}/throughput",
+            wall / n_requests,
+            f"{n_requests / wall:.1f} req/s over {n_requests} mixed "
+            f"kind/bucket/tier requests, device_idle={idle:.2f} "
+            f"occupancy={occ:.2f} (best of 3 interleaved passes)"))
+    (ws, _, _), (wa, ai, _) = stats["sync"], stats["async"]
+    (wo, oi, _) = stats["offline"]
+    rows.append(record(
+        f"pipeline_overlap/{dataset}/speedup", 0.0,
+        f"{ws / wa:.2f}x async vs online run(); device_idle "
+        f"{oi:.2f} (submit-all run()) -> {ai:.2f} (pipelined); "
+        f"offline oracle wall at {wo / wa:.2f}x of async"))
+    return rows
+
+
 # ------------------------------------------------------- energy / GraSp
 
 

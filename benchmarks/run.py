@@ -5,9 +5,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record) and
 writes benchmarks/results.json. ``--bench-json`` additionally writes the
-serving-throughput, CacheG operand-bytes, and quality-tier rows to a
-standalone file (CI commits none of it, but the artifact tracks the perf
-trajectory per PR — schema in benchmarks/README.md). The roofline report
+serving-throughput, CacheG operand-bytes, quality-tier, and
+pipeline-overlap rows to a standalone file (CI uploads it as the
+``BENCH_gnn`` artifact per push to track the perf trajectory; the
+repo-root BENCH_gnn.json is a committed point-in-time snapshot — schema
+in benchmarks/README.md). The roofline report
 (§Roofline) is generated separately by launch/dryrun.py (needs the
 512-device placeholder env).
 """
@@ -55,6 +57,9 @@ def main() -> None:
     # per-tier latency/bytes/accuracy-delta rows still land in BENCH_gnn.json
     gnn_paper.quality_tiers(epochs=12 if args.quick else 60,
                             n_queries=3 if args.quick else 6)
+    # async pipeline scheduler vs sync run() (DESIGN.md §9): online mixed
+    # kind/bucket/tier stream; fewer requests in --quick keeps CI ~fast
+    gnn_paper.pipeline_overlap(n_requests=16 if args.quick else 24)
     lm_subs.ssd_vs_sequential()
     lm_subs.moe_dispatch_paths()
     lm_subs.serving_bucket_reuse()
@@ -66,7 +71,8 @@ def main() -> None:
     if args.bench_json:
         perf = [r for r in ROWS
                 if r["name"].startswith(("serve/", "operand_pipeline/",
-                                         "quality_tiers/"))]
+                                         "quality_tiers/",
+                                         "pipeline_overlap/"))]
         with open(args.bench_json, "w") as f:
             json.dump({"rows": perf}, f, indent=1)
         print(f"# wrote {len(perf)} perf rows -> {args.bench_json}")

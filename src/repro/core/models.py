@@ -355,6 +355,59 @@ def build_materializer() -> OperandMaterializer:
     return mat
 
 
+@dataclasses.dataclass
+class HostOperands:
+    """Product of the pipeline's HOST stage for one request (DESIGN.md §9).
+
+    The GraphSplit host work — padding aside (the caller pads), this is
+    CompactOperands bit-packing or the eager dense build — is separable
+    from the DEVICE work (materialization + the plan dispatch) so a
+    scheduler can run the two on different threads: `prepare_host_operands`
+    is pure numpy/bit work a host worker executes, `realize_operands` turns
+    the result into the device-resident `GranniteOperands` the plan
+    consumes. Exactly one of `compact` / `eager` is set; `nbytes` is the
+    host→device operand traffic this form moves (the `operand_bytes_h2d`
+    unit), and `fallback` marks a directed GCN/GAT graph that could not
+    take the SymG compact path (counted as `cacheg_fallbacks`).
+    """
+    compact: Optional[CompactOperands] = None
+    eager: Optional[GranniteOperands] = None
+    nbytes: int = 0
+    fallback: bool = False
+
+
+def prepare_host_operands(pg: PaddedGraph, cfg: GNNConfig, *,
+                          use_cacheg: bool = True,
+                          rng: Optional[np.random.Generator] = None
+                          ) -> HostOperands:
+    """HOST stage of the operand pipeline: pack (CacheG) or build (eager).
+
+    Prefers the CacheG compact transfer form; directed GCN/GAT graphs
+    (SymG needs symmetry) and engines running with `use_cacheg=False` fall
+    back to the eager dense host build. No device work happens here — a
+    scheduler host worker can call this from any thread.
+    """
+    from .graph import is_symmetric_adjacency
+    if use_cacheg and (cfg.kind == "sage" or is_symmetric_adjacency(pg.adj)):
+        co = compact_operands(pg, cfg, rng=rng, check_symmetry=False)
+        return HostOperands(compact=co, nbytes=co.nbytes)
+    ops = build_operands(pg, cfg, lean=True, rng=rng)
+    return HostOperands(eager=ops, nbytes=operand_nbytes(ops),
+                        fallback=use_cacheg)
+
+
+def realize_operands(ho: HostOperands,
+                     materializer: OperandMaterializer) -> GranniteOperands:
+    """DEVICE stage counterpart: expand the host product into the dense
+    operand set (a jitted materializer call for the compact form, identity
+    for the eager fallback). Dispatch is async under jax, so a host worker
+    calling this merely *enqueues* device work — the dense arrays are
+    created in device memory either way."""
+    if ho.compact is not None:
+        return materializer(ho.compact)
+    return ho.eager
+
+
 def operand_nbytes(ops: GranniteOperands) -> int:
     """Host→device bytes of one eagerly built operand set (the five dense
     fields; GraSp/QuantGr structures never take the batched serve path).

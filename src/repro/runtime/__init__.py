@@ -1,1 +1,1 @@
-from . import gnn_server, server, trainer  # noqa: F401
+from . import gnn_server, scheduler, server, trainer  # noqa: F401

@@ -20,7 +20,17 @@ of *graphs* — the paper's actual workload:
     (`core.models.stack_operands`) and executed through the plan's vmapped
     callable at a FIXED batch width; partial batches repeat a real request
     into the junk slots (dropped on output) so batch width never changes
-    shape — the same trick as the LM server's empty decode slots.
+    shape — the same trick as the LM server's empty decode slots. Batch
+    selection is best-fill (`best_fill_key`): the fullest (model, bucket,
+    tier) key dispatches first, with per-model fairness on ties, so a lone
+    odd request at the head of the queue cannot force a 1-of-N batch.
+  * Pipeline (DESIGN.md §9) — the sync path (`submit`/`query` + `run()`)
+    executes host and device stages serially; `scheduler()` attaches the
+    async two-stage pipeline (`runtime/scheduler.py`): host worker threads
+    run `prepare_submit`/`prepare_query` (padding, operand build/packing,
+    CacheG lookups) while the dispatcher thread drives `_execute_batch`,
+    so host preprocessing for request N+1 overlaps device execution of
+    request N. Every engine contract below holds under both drivers.
   * CacheG (DESIGN.md §7) — operands cross the host→device link as a
     bit-packed compact form (SymG triangular for undirected graphs) and are
     expanded to the dense float32 set ON DEVICE by a jitted materializer;
@@ -65,14 +75,14 @@ Engine contracts (what tests and operators may rely on):
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import (BucketLadder, Graph, PaddedGraph,
-                              is_symmetric_adjacency, pad_graph,
+from repro.core.graph import (BucketLadder, Graph, PaddedGraph, pad_graph,
                               stack_padded)
 from repro.core.layers import Techniques
 from repro.core.models import (ExecutionPlan, GNNConfig, GranniteOperands,
@@ -80,7 +90,8 @@ from repro.core.models import (ExecutionPlan, GNNConfig, GranniteOperands,
                                build_materializer, build_operands, build_plan,
                                calibrate_tier, compact_operands,
                                derive_tier_operands, forward_grannite,
-                               init_params, operand_nbytes, stack_operands,
+                               init_params, prepare_host_operands,
+                               realize_operands, stack_operands,
                                stack_tier_operands)
 
 # Per-kind serving techniques for models registered WITHOUT a tier ladder:
@@ -94,6 +105,45 @@ DEFAULT_TECHNIQUES: Dict[str, Techniques] = {
 }
 
 STANDARD_TIERS = ("fp32", "int8", "int8+grax")
+
+BatchKey = Tuple[str, int, str]                  # (model, bucket, tier)
+
+
+def best_fill_key(stats: Dict[BatchKey, Tuple[int, int]], batch_slots: int,
+                  last_dispatch: Optional[Dict[str, int]] = None) -> BatchKey:
+    """Pick the batch key to dispatch next (DESIGN.md §9).
+
+    `stats` maps each pending (model, bucket, tier) key to `(count,
+    head_order)` — how many requests wait under it and the arrival order of
+    its oldest one. Selection order:
+
+      1. best fill — most waiting requests, capped at `batch_slots` (a key
+         with 9 waiting fills a 4-slot batch no better than one with 4);
+      2. per-model fairness — among equal fills, the model dispatched
+         LONGEST ago (its serial in `last_dispatch`) goes first, so one
+         chatty tenant cannot starve another at equal batch efficiency;
+      3. FIFO — oldest head request breaks remaining ties.
+
+    This replaces the old head-of-line rule (`queue[0]`'s key, whatever it
+    was), under which a lone odd request at the head forced a 1-of-N batch
+    while fully-fillable keys waited behind it.
+    """
+    last_dispatch = last_dispatch or {}
+    return min(stats.items(),
+               key=lambda kv: (-min(kv[1][0], batch_slots),
+                               last_dispatch.get(kv[0][0], -1),
+                               kv[1][1]))[0]
+
+
+def pending_stats(reqs: Sequence["GNNRequest"]
+                  ) -> Dict[BatchKey, Tuple[int, int]]:
+    """Fold a pending-request sequence into `best_fill_key` stats."""
+    stats: Dict[BatchKey, Tuple[int, int]] = {}
+    for i, r in enumerate(reqs):
+        k = (r.model, r.bucket, r.tier)
+        c = stats.get(k)
+        stats[k] = (1, i) if c is None else (c[0] + 1, c[1])
+    return stats
 
 
 def tier_techniques(kind: str) -> Dict[str, Techniques]:
@@ -203,12 +253,25 @@ class GraphServe:
         self._warm_blobs: Optional[int] = None
         self._uid = 0
         self._gid = 0
+        # one lock guards uid/gid counters, metrics, the operand caches, and
+        # the graphs registry: the pipeline scheduler (runtime/scheduler.py)
+        # runs prepare_submit/prepare_query on host worker threads while
+        # update()/detach() arrive from the caller's thread. Never call a
+        # _lock-taking helper while holding _lock.
+        self._lock = threading.Lock()
+        self._dispatch_serial = 0
+        self._last_dispatch: Dict[str, int] = {}   # model -> dispatch serial
         self.metrics = {"batches": 0, "slots_filled": 0, "slots_total": 0,
                         "rebucket_events": 0, "latency_s": [],
                         "first_submit_s": None, "last_finish_s": None,
+                        "device_busy_s": 0.0,
                         "operand_bytes_h2d": 0, "operand_cache_hits": 0,
                         "operand_cache_misses": 0, "cacheg_fallbacks": 0,
                         "tier_fallbacks": 0}
+
+    def _count(self, name: str, delta=1) -> None:
+        with self._lock:
+            self.metrics[name] += delta
 
     # ------------------------------------------------------------------ setup
     def register_model(self, name: str, cfg: GNNConfig, params: Optional[Dict] = None,
@@ -411,7 +474,7 @@ class GraphServe:
             raise KeyError(f"model {model!r} has no tier {tier!r} "
                            f"(registered: {sorted(e.tiers)})")
         if e.tiers[tier].quantgr and tier not in e.calibrations:
-            self.metrics["tier_fallbacks"] += 1
+            self._count("tier_fallbacks")
             return "fp32"
         return tier
 
@@ -424,29 +487,34 @@ class GraphServe:
 
     # ------------------------------------------------------------------ intake
     def _device_operands(self, model: str, pg: PaddedGraph) -> GranniteOperands:
-        """Build one graph's device-resident operands, preferring the CacheG
-        compact transfer + on-device materialization; directed GCN/GAT graphs
-        (SymG needs symmetry) fall back to the eager dense upload — same
-        plans, no new traces, just more host→device bytes."""
-        e = self.models[model]
-        if self.sc.use_cacheg:
-            if e.cfg.kind == "sage" or is_symmetric_adjacency(pg.adj):
-                # symmetry was just checked — don't pay the O(cap²)
-                # comparison a second time inside the packer
-                co = compact_operands(pg, e.cfg, check_symmetry=False)
-                self.metrics["operand_bytes_h2d"] += co.nbytes
-                return self._materializer(co)
-            self.metrics["cacheg_fallbacks"] += 1
-        ops = build_operands(pg, e.cfg, lean=True)
-        self.metrics["operand_bytes_h2d"] += operand_nbytes(ops)
-        return ops
+        """Build one graph's device-resident operands: the HOST stage
+        (`prepare_host_operands` — CacheG compact packing, or the eager
+        dense build for directed GCN/GAT graphs, counted as
+        `cacheg_fallbacks`) followed immediately by the DEVICE stage
+        (`realize_operands`). The pipeline scheduler runs the same two
+        calls, just on a host worker thread."""
+        ho = prepare_host_operands(pg, self.models[model].cfg,
+                                   use_cacheg=self.sc.use_cacheg)
+        self._count("operand_bytes_h2d", ho.nbytes)
+        if ho.fallback:
+            self._count("cacheg_fallbacks")
+        return realize_operands(ho, self._materializer)
 
-    def _enqueue(self, model: str, pg: PaddedGraph,
+    def _prepare(self, model: str, pg: PaddedGraph,
                  ops: Optional[GranniteOperands] = None, *,
                  tier: Optional[str] = None,
                  tier_ops: Optional[TierOperands] = None,
-                 tier_resolved: bool = False) -> int:
+                 tier_resolved: bool = False,
+                 submitted_s: Optional[float] = None) -> GNNRequest:
+        """Host-stage tail shared by every intake path: resolve the tier,
+        realize operands if the caller didn't, assign the uid. Returns the
+        ready-to-dispatch request WITHOUT touching the engine queue — the
+        sync path pushes it (`_push`), the pipeline scheduler hands it to
+        its own ready stage. `submitted_s` lets the scheduler pin latency
+        accounting to intake time (queue wait included) rather than to
+        host-stage completion."""
         now = time.perf_counter()
+        submitted_s = submitted_s if submitted_s is not None else now
         if not tier_resolved:
             tier = self._resolve_tier(model, tier)
         if ops is None:
@@ -454,19 +522,31 @@ class GraphServe:
         if tier_ops is None and self._needs_tier_ops(self.models[model], tier):
             # one-shot request: derive without caching (nothing to key on)
             tier_ops = self._agg_quantizer(ops.norm_adj)
-        req = GNNRequest(uid=self._uid, model=model, pg=pg, ops=ops,
-                         bucket=pg.capacity, submitted_s=now,
-                         tier=tier, tier_ops=tier_ops)
-        self._uid += 1
-        if self.metrics["first_submit_s"] is None:
-            self.metrics["first_submit_s"] = now
+        with self._lock:
+            uid = self._uid
+            self._uid += 1
+            if self.metrics["first_submit_s"] is None:
+                self.metrics["first_submit_s"] = submitted_s
+        return GNNRequest(uid=uid, model=model, pg=pg, ops=ops,
+                          bucket=pg.capacity, submitted_s=submitted_s,
+                          tier=tier, tier_ops=tier_ops)
+
+    def _push(self, req: GNNRequest) -> int:
         self.queue.append(req)
         return req.uid
+
+    def prepare_submit(self, g: Graph, *, model: str,
+                       tier: Optional[str] = None,
+                       submitted_s: Optional[float] = None) -> GNNRequest:
+        """HOST stage of a one-shot request: NodePad padding + operand
+        build/packing. Scheduler-callable from any worker thread."""
+        return self._prepare(model, self.sc.ladder.pad(g), tier=tier,
+                             submitted_s=submitted_s)
 
     def submit(self, g: Graph, *, model: str,
                tier: Optional[str] = None) -> int:
         """One-shot inference request over a static graph."""
-        return self._enqueue(model, self.sc.ladder.pad(g), tier=tier)
+        return self._push(self.prepare_submit(g, model=model, tier=tier))
 
     def attach(self, g: Graph, *, model: str, calibrate: bool = True) -> int:
         """Register an evolving graph; returns a graph_id for update/query.
@@ -479,10 +559,11 @@ class GraphServe:
         pg = self.sc.ladder.pad(g)
         if calibrate:
             self._calibrate(model, pg)      # no-op once (model, tier) is done
-        gid = self._gid
-        self._gid += 1
-        self.graphs[gid] = (model, pg)
-        self._graph_version[gid] = 0
+        with self._lock:
+            gid = self._gid
+            self._gid += 1
+            self.graphs[gid] = (model, pg)
+            self._graph_version[gid] = 0
         return gid
 
     def detach(self, graph_id: int) -> None:
@@ -495,10 +576,11 @@ class GraphServe:
         is deliberately no silent LRU: evicting a live tenant's operands
         would turn its next query into a surprise re-materialize).
         """
-        key = (graph_id, self._graph_version.pop(graph_id, -1))
-        self._operand_cache.pop(key, None)
-        self._tier_operand_cache.pop(key, None)
-        self.graphs.pop(graph_id, None)
+        with self._lock:
+            key = (graph_id, self._graph_version.pop(graph_id, -1))
+            self._operand_cache.pop(key, None)
+            self._tier_operand_cache.pop(key, None)
+            self.graphs.pop(graph_id, None)
 
     def update(self, graph_id: int, edge_index: np.ndarray, num_nodes: int,
                features: np.ndarray) -> bool:
@@ -506,20 +588,23 @@ class GraphServe:
 
         Bumps the structure version, which invalidates the CacheG operand
         cache — the next `query()` re-materializes exactly once."""
-        model, pg = self.graphs[graph_id]
+        with self._lock:
+            model, pg = self.graphs[graph_id]
         pg, rebucketed = self.sc.ladder.grow(pg, edge_index, num_nodes,
                                              features)
-        self.graphs[graph_id] = (model, pg)
-        ver = self._graph_version[graph_id]
-        self._operand_cache.pop((graph_id, ver), None)
-        self._tier_operand_cache.pop((graph_id, ver), None)
-        self._graph_version[graph_id] = ver + 1
-        if rebucketed:
-            self.metrics["rebucket_events"] += 1
+        with self._lock:
+            self.graphs[graph_id] = (model, pg)
+            ver = self._graph_version[graph_id]
+            self._operand_cache.pop((graph_id, ver), None)
+            self._tier_operand_cache.pop((graph_id, ver), None)
+            self._graph_version[graph_id] = ver + 1
+            if rebucketed:
+                self.metrics["rebucket_events"] += 1
         return rebucketed
 
-    def query(self, graph_id: int, *, tier: Optional[str] = None) -> int:
-        """Enqueue inference over an attached graph's current snapshot,
+    def prepare_query(self, graph_id: int, *, tier: Optional[str] = None,
+                      submitted_s: Optional[float] = None) -> GNNRequest:
+        """HOST stage of a query over an attached graph's current snapshot,
         optionally pinning a quality tier (model default otherwise).
 
         CacheG hit path: an unchanged structure serves straight from the
@@ -528,29 +613,52 @@ class GraphServe:
         same fp32 operands feed every tier's plan, and the int8 Â that
         QuantGr GCN tiers read is quantized from them once per structure
         version into the tier cache below — so mixed-tier traffic over one
-        graph shares one entry of each."""
-        model, pg = self.graphs[graph_id]
+        graph shares one entry of each.
+
+        Thread discipline (the scheduler calls this from host workers while
+        `update()` may arrive concurrently): the (model, pg, version)
+        triple is snapshotted under the engine lock, operands are built
+        OUTSIDE it, and a built entry is inserted only if the version is
+        still current — a request racing an update serves the snapshot it
+        read, and a stale build can never pin dead device memory under an
+        unreachable key. Two workers missing the same key may both build
+        (both counted as misses); last insert wins, values are identical.
+        """
+        with self._lock:
+            model, pg = self.graphs[graph_id]
+            ver = self._graph_version[graph_id]
         if not self.sc.use_cacheg:
-            return self._enqueue(model, pg, tier=tier)
-        key = (graph_id, self._graph_version[graph_id])
-        ops = self._operand_cache.get(key)
+            return self._prepare(model, pg, tier=tier,
+                                 submitted_s=submitted_s)
+        key = (graph_id, ver)
+        with self._lock:
+            ops = self._operand_cache.get(key)
         if ops is None:
-            self.metrics["operand_cache_misses"] += 1
+            self._count("operand_cache_misses")
             ops = self._device_operands(model, pg)
-            self._operand_cache[key] = ops
+            with self._lock:
+                if self._graph_version.get(graph_id) == ver:
+                    self._operand_cache[key] = ops
         else:
-            self.metrics["operand_cache_hits"] += 1
+            self._count("operand_cache_hits")
         tops = None
         resolved = self._resolve_tier(model, tier)
         if self._needs_tier_ops(self.models[model], resolved):
             # derived-form hit path: the int8 Â is structure work too —
             # once per (graph, version), never per query
-            tops = self._tier_operand_cache.get(key)
+            with self._lock:
+                tops = self._tier_operand_cache.get(key)
             if tops is None:
                 tops = self._agg_quantizer(ops.norm_adj)
-                self._tier_operand_cache[key] = tops
-        return self._enqueue(model, pg, ops, tier=resolved, tier_ops=tops,
-                             tier_resolved=True)
+                with self._lock:
+                    if self._graph_version.get(graph_id) == ver:
+                        self._tier_operand_cache[key] = tops
+        return self._prepare(model, pg, ops, tier=resolved, tier_ops=tops,
+                             tier_resolved=True, submitted_s=submitted_s)
+
+    def query(self, graph_id: int, *, tier: Optional[str] = None) -> int:
+        """Enqueue inference over an attached graph (see `prepare_query`)."""
+        return self._push(self.prepare_query(graph_id, tier=tier))
 
     # --------------------------------------------------------------- execution
     def run(self) -> List[GNNRequest]:
@@ -559,16 +667,32 @@ class GraphServe:
         return self.finished
 
     def _run_batch(self) -> None:
-        head = self.queue[0]
-        # tier is part of the batch key: tiers are different compiled plans,
-        # so a slot can never mix execution variants
-        key = (head.model, head.bucket, head.tier)
+        # best-filling key first (not queue[0]'s — see best_fill_key): a
+        # lone odd request at the head no longer forces a 1-of-N dispatch
+        # while fully-fillable keys wait behind it. Tier is part of the
+        # batch key: tiers are different compiled plans, so a slot can
+        # never mix execution variants.
+        key = best_fill_key(pending_stats(self.queue), self.sc.batch_slots,
+                            self._last_dispatch)
         batch = [r for r in self.queue
                  if (r.model, r.bucket, r.tier) == key][: self.sc.batch_slots]
         taken = {r.uid for r in batch}
         self.queue = [r for r in self.queue if r.uid not in taken]
+        self._execute_batch(batch)
 
+    def _execute_batch(self, batch: List[GNNRequest]) -> None:
+        """DEVICE stage: one fixed-width dispatch of same-key requests.
+
+        Called with 1..batch_slots requests sharing one (model, bucket,
+        tier) key, from exactly ONE thread at a time (the sync `run()`
+        loop, or the pipeline scheduler's dispatcher). Junk slots repeat a
+        real request so batch width never changes shape; their outputs are
+        dropped. `device_busy_s` accumulates the wall-clock of this stage —
+        the pipeline's device-idle fraction is measured against it.
+        """
+        head = batch[0]
         b = self.sc.batch_slots
+        t0 = time.perf_counter()
         # fixed batch width: junk slots repeat a real request, outputs dropped
         slots = batch + [batch[-1]] * (b - len(batch))
         e = self.models[head.model]
@@ -592,12 +716,30 @@ class GraphServe:
                 r.logits = lg
             r.done = True
             r.finished_s = now
-            self.metrics["latency_s"].append(now - r.submitted_s)
-            self.finished.append(r)
-        self.metrics["batches"] += 1
-        self.metrics["slots_filled"] += len(batch)
-        self.metrics["slots_total"] += b
-        self.metrics["last_finish_s"] = now
+        with self._lock:
+            for r in batch:
+                self.metrics["latency_s"].append(now - r.submitted_s)
+                self.finished.append(r)
+            self.metrics["batches"] += 1
+            self.metrics["slots_filled"] += len(batch)
+            self.metrics["slots_total"] += b
+            self.metrics["device_busy_s"] += now - t0
+            self.metrics["last_finish_s"] = now
+            self._last_dispatch[head.model] = self._dispatch_serial
+            self._dispatch_serial += 1
+
+    # -------------------------------------------------------------- pipeline
+    def scheduler(self, pc=None):
+        """Attach an async two-stage pipeline scheduler (DESIGN.md §9).
+
+        Returns a `runtime.scheduler.PipelineScheduler` whose host workers
+        run this engine's `prepare_submit`/`prepare_query` stages while its
+        dispatcher drives `_execute_batch` — host preprocessing for request
+        N+1 overlaps device execution of request N. Use as a context
+        manager; the sync `submit`/`query` + `run()` path stays available
+        on the bare engine."""
+        from .scheduler import PipelineScheduler
+        return PipelineScheduler(self, pc)
 
     # ---------------------------------------------------------------- metrics
     def tier_summary(self) -> Dict[str, Dict[str, float]]:
@@ -630,6 +772,13 @@ class GraphServe:
             "batches": self.metrics["batches"],
             "batch_occupancy": (self.metrics["slots_filled"]
                                 / max(self.metrics["slots_total"], 1)),
+            "device_busy_s": self.metrics["device_busy_s"],
+            # fraction of the serving span the device stage sat idle —
+            # the pipeline scheduler's overlap claim is judged on this
+            # (DESIGN.md §9); 1 - busy/span, 0 when nothing ran
+            "device_idle_fraction": (
+                max(0.0, 1.0 - self.metrics["device_busy_s"] / span)
+                if span > 0 else 0.0),
             "rebucket_events": self.metrics["rebucket_events"],
             "operand_bytes_h2d": self.metrics["operand_bytes_h2d"],
             "operand_cache_hits": self.metrics["operand_cache_hits"],

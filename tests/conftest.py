@@ -7,6 +7,23 @@ import pytest
 
 os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")  # kernels: interpret mode
 
+# Hypothesis depth is profile-driven: the default `ci` profile keeps the
+# PR-gate suite fast, the `nightly` profile (selected by the scheduled CI
+# job via HYPOTHESIS_PROFILE=nightly) runs an order of magnitude more
+# examples. No property test pins its own max_examples — a per-test
+# @settings would silently override the profile and opt out of the
+# nightly deepening.
+try:
+    from hypothesis import HealthCheck, settings
+
+    _COMMON = dict(deadline=None,
+                   suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile("ci", max_examples=25, **_COMMON)
+    settings.register_profile("nightly", max_examples=300, **_COMMON)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:                               # tier-1 runs without it
+    pass
+
 
 @pytest.fixture(scope="session")
 def rng():

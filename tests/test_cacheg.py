@@ -142,7 +142,7 @@ def test_repeated_query_skips_host_operand_build(monkeypatch):
     gid = eng.attach(_graph(100), model="gat")
 
     calls = {"eager": 0, "compact": 0}
-    real_build, real_compact = server_mod.build_operands, server_mod.compact_operands
+    real_build, real_compact = models_mod.build_operands, models_mod.compact_operands
 
     def count_build(*a, **k):
         calls["eager"] += 1
@@ -152,8 +152,10 @@ def test_repeated_query_skips_host_operand_build(monkeypatch):
         calls["compact"] += 1
         return real_compact(*a, **k)
 
-    monkeypatch.setattr(server_mod, "build_operands", count_build)
-    monkeypatch.setattr(server_mod, "compact_operands", count_compact)
+    # the host stage lives in core.models.prepare_host_operands (the
+    # pipeline split, DESIGN.md §9), so the build fns are intercepted there
+    monkeypatch.setattr(models_mod, "build_operands", count_build)
+    monkeypatch.setattr(models_mod, "compact_operands", count_compact)
 
     eng.query(gid)                          # structure miss: one compact build
     eng.run()

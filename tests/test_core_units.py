@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis import given, strategies as st  # noqa: E402
 
 from repro.core import effop, masks
 from repro.core.graph import (dense_adjacency, gcn_norm_adjacency,
@@ -29,7 +29,6 @@ def graphs(draw):
 
 
 @given(graphs())
-@settings(max_examples=30, deadline=None)
 def test_gcn_norm_rows_bounded(g):
     """Property: Â = D^-1/2 (A+I) D^-1/2 is symmetric-ish w/ bounded rows."""
     ei, n = g
@@ -44,7 +43,6 @@ def test_gcn_norm_rows_bounded(g):
 
 
 @given(graphs())
-@settings(max_examples=30, deadline=None)
 def test_mean_adjacency_rows_sum_to_one_or_zero(g):
     ei, n = g
     cap = ((n + 127) // 128) * 128
@@ -55,7 +53,6 @@ def test_mean_adjacency_rows_sum_to_one_or_zero(g):
 
 
 @given(st.integers(2, 50), st.integers(0, 2 ** 16))
-@settings(max_examples=20, deadline=None)
 def test_symg_roundtrip(n, seed):
     rng = np.random.default_rng(seed)
     m = rng.random((n, n)).astype(np.float32)
@@ -75,7 +72,6 @@ def test_symg_rejects_asymmetric():
 
 @given(st.integers(1, 3), st.integers(1, 3), st.floats(0.0, 0.3),
        st.integers(0, 2 ** 16))
-@settings(max_examples=20, deadline=None)
 def test_block_sparse_roundtrip(rb, cb, density, seed):
     rng = np.random.default_rng(seed)
     n, m = rb * 128, cb * 128
@@ -86,7 +82,6 @@ def test_block_sparse_roundtrip(rb, cb, density, seed):
 
 
 @given(st.integers(10, 400), st.floats(0.0, 0.5), st.integers(0, 2 ** 16))
-@settings(max_examples=30, deadline=None)
 def test_zvc_roundtrip_and_size(n, density, seed):
     rng = np.random.default_rng(seed)
     x = ((rng.random(n) < density) * rng.standard_normal(n)).astype(np.float32)
@@ -135,7 +130,6 @@ def test_bfs_reorder_is_permutation_and_preserves_matmul():
 
 
 @given(st.integers(2, 40), st.integers(1, 12), st.integers(0, 2 ** 16))
-@settings(max_examples=25, deadline=None)
 def test_one_hot_gather_equals_gather(n, f, seed):
     import jax.numpy as jnp
     rng = np.random.default_rng(seed)
@@ -146,7 +140,6 @@ def test_one_hot_gather_equals_gather(n, f, seed):
 
 
 @given(st.integers(2, 30), st.integers(0, 2 ** 16))
-@settings(max_examples=25, deadline=None)
 def test_segment_softmax_dense_rows_sum_to_one(n, seed):
     import jax.numpy as jnp
     rng = np.random.default_rng(seed)
@@ -165,7 +158,6 @@ def test_segment_softmax_dense_rows_sum_to_one(n, seed):
 
 
 @given(st.integers(4, 200), st.integers(0, 2 ** 16))
-@settings(max_examples=25, deadline=None)
 def test_quant_roundtrip_error_bounded(n, seed):
     import jax.numpy as jnp
     rng = np.random.default_rng(seed)

@@ -1,0 +1,158 @@
+"""Property-based differential serving suite (DESIGN.md §9).
+
+Hypothesis-driven randomized properties over the whole serving stack:
+random graphs × kinds (GCN/GAT/SAGE) × quality tiers served through the
+deterministic pipeline scheduler must equal the sequential single-request
+forward; the CacheG/SymG pack→unpack transfer forms must round-trip
+losslessly; NodePad's admission rule must be monotone. Skipped without
+hypothesis (tier-1 stays dependency-light); CI installs requirements-dev
+so these EXECUTE there, and the scheduled nightly job deepens
+`max_examples` via the `nightly` profile registered in conftest.py. Tests
+here deliberately carry no per-test `max_examples` so the active profile
+controls depth; determinism comes from hypothesis' own seeding plus the
+engine's deterministic scheduler mode.
+
+The seeded SymG round-trip sweep formerly in test_gnn_serving.py was
+promoted into `test_symg_roundtrip_lossless` here.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.graph import (BucketLadder, node_bucket, pad_graph,  # noqa: E402
+                              required_capacity, symg_pack, symg_unpack)
+from repro.core.models import (GNNConfig, _unpack_adjacency,  # noqa: E402
+                               compact_operands, forward_grannite)
+from repro.data.graphs import planetoid_like  # noqa: E402
+from repro.runtime.gnn_server import (STANDARD_TIERS, GraphServe,  # noqa: E402
+                                      GraphServeConfig)
+from repro.runtime.scheduler import PipelineConfig  # noqa: E402
+
+IN_FEATS, CLASSES = 12, 4
+BUCKETS = (128, 256)
+KINDS = ("gcn", "gat", "sage")
+
+
+def _graph(n, seed):
+    return planetoid_like(num_nodes=n, num_edges=3 * n, num_feats=IN_FEATS,
+                          num_classes=CLASSES, seed=seed, train_per_class=1)
+
+
+# Warm engines are expensive (one compile sweep per kind) and hypothesis
+# runs many examples: build each kind's engine once at module scope and let
+# every example serve on it — examples only ever REPLAY warm plans, which
+# assert_warm re-checks at the end of each one.
+_ENGINES = {}
+
+
+def _engine(kind):
+    if kind not in _ENGINES:
+        sc = GraphServeConfig(ladder=BucketLadder(buckets=BUCKETS),
+                              batch_slots=3, return_logits=True)
+        eng = GraphServe(sc, seed=0)
+        eng.register_model(kind, GNNConfig(
+            kind=kind, in_feats=IN_FEATS, hidden=8, num_classes=CLASSES,
+            heads=2, aggregator="max" if kind == "sage" else "mean"),
+            tiers=STANDARD_TIERS)
+        eng.warmup()
+        eng.calibrate(kind, _graph(64, seed=999))   # quant tiers live
+        _ENGINES[kind] = eng
+    return _ENGINES[kind]
+
+
+# ------------------------------------------- differential: async == single
+
+
+@st.composite
+def traffic(draw):
+    kind = draw(st.sampled_from(KINDS))
+    k = draw(st.integers(1, 5))
+    reqs = [(draw(st.integers(10, 200)),             # num_nodes
+             draw(st.integers(0, 2 ** 16)),          # graph seed
+             draw(st.sampled_from((None,) + STANDARD_TIERS)))
+            for _ in range(k)]
+    return kind, reqs
+
+
+@given(traffic())
+def test_async_batched_logits_equal_sequential(case):
+    """The tentpole differential: ANY mix of graph sizes and tiers served
+    batched through the deterministic pipeline scheduler equals the
+    sequential single-request forward, and replays entirely warm."""
+    kind, reqs = case
+    eng = _engine(kind)
+    with eng.scheduler(PipelineConfig(deterministic=True)) as sched:
+        for n, seed, tier in reqs:
+            sched.submit(_graph(n, seed), model=kind, tier=tier)
+        out = sched.drain()
+    assert len(out) == len(reqs) and all(r.done for r in out)
+    e = eng.models[kind]
+    for r in out:
+        ref = forward_grannite(e.params, e.cfg, jnp.asarray(r.pg.features),
+                               r.ops, e.tiers[r.tier],
+                               quant=e.calibrations.get(r.tier),
+                               tier_ops=r.tier_ops)
+        np.testing.assert_allclose(r.logits,
+                                   np.asarray(ref)[: r.pg.num_nodes],
+                                   atol=2e-5)
+        np.testing.assert_array_equal(
+            r.preds, np.asarray(ref)[: r.pg.num_nodes].argmax(-1))
+    eng.assert_warm()
+
+
+# --------------------------------------------------- pack/unpack round-trips
+
+
+@given(st.integers(2, 60), st.integers(0, 2 ** 16))
+def test_symg_roundtrip_lossless(n, seed):
+    """SymG pack/unpack is lossless and stores exactly the n(n+1)/2 upper
+    triangle (promoted from the seeded sweep in test_gnn_serving.py)."""
+    rng = np.random.default_rng(seed)
+    m = rng.random((n, n)).astype(np.float32)
+    sym = (m + m.T) / 2
+    packed, nn = symg_pack(sym)
+    assert packed.size == n * (n + 1) // 2
+    np.testing.assert_allclose(symg_unpack(packed, nn), sym, atol=1e-6)
+
+
+@given(st.integers(10, 150), st.integers(0, 2 ** 16))
+def test_compact_transfer_bits_roundtrip(n, seed):
+    """CacheG's bit-packed transfer form reproduces the exact 0/1 adjacency
+    through the device-side unpack, padding included."""
+    g = _graph(n, seed)
+    pg = pad_graph(g, capacity=node_bucket(n))
+    co = compact_operands(pg, GNNConfig(kind="gcn", in_feats=IN_FEATS,
+                                        num_classes=CLASSES))
+    np.testing.assert_array_equal(np.asarray(_unpack_adjacency(co)), pg.adj)
+
+
+# -------------------------------------------------- NodePad admission rule
+
+
+@given(st.integers(1, 4000), st.integers(0, 4000),
+       st.floats(0.0, 0.5, allow_nan=False), st.floats(0.0, 0.5,
+                                                       allow_nan=False))
+def test_required_capacity_monotone(n, dn, s1, s2):
+    """`required_capacity` is monotone in BOTH arguments (more nodes or more
+    slack can never need less room), always admits the graph itself, and
+    `node_bucket` rounds it to a tile multiple without undershooting."""
+    lo_s, hi_s = sorted((s1, s2))
+    assert required_capacity(n, lo_s) >= n
+    assert required_capacity(n + dn, lo_s) >= required_capacity(n, lo_s)
+    assert required_capacity(n, hi_s) >= required_capacity(n, lo_s)
+    b = node_bucket(n, slack=lo_s)
+    assert b % 128 == 0 and b >= required_capacity(n, lo_s)
+
+
+@given(st.integers(1, 384), st.integers(1, 384))
+def test_ladder_admission_monotone(a, b):
+    """A bigger graph never lands in a smaller rung, and every rung covers
+    the slack-adjusted requirement."""
+    lad = BucketLadder(buckets=(128, 256, 384))
+    lo, hi = min(a, b), max(a, b)
+    assert lad.bucket_for(lo) <= lad.bucket_for(hi)
+    assert lad.bucket_for(lo) >= required_capacity(lo, lad.slack)

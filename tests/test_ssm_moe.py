@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis import given, strategies as st  # noqa: E402
 
 from repro.configs import ARCHS, reduced
 from repro.nn import moe as moe_mod
@@ -156,7 +156,6 @@ def test_moe_capacity_drops_overflow():
 
 
 @given(st.integers(0, 2 ** 16))
-@settings(max_examples=10, deadline=None)
 def test_moe_router_gates_normalized(seed):
     cfg = _moe_cfg()
     logits = jax.random.normal(jax.random.PRNGKey(seed), (32, cfg.moe.num_experts))
