@@ -615,6 +615,96 @@ def pipeline_overlap(dataset: str = "cora", *, n_requests: int = 24,
     return rows
 
 
+def grasp_serving(dataset: str = "cora", *, cap: int = 1024,
+                  n_queries: int = 4, batch_slots: int = 2,
+                  seed: int = 0) -> List[Dict]:
+    """GraSp aggregation backend vs dense through GraphServe (DESIGN.md
+    §10): dense-vs-grasp latency and operand bytes per graph density.
+
+    Serves community-clustered GCN graphs of falling density (high-density
+    graphs scatter cross-community edges until the block bitmap fills) at
+    one `cap` rung through two identically-warmed engines — `dense` forced
+    and `auto` — with batched queries (batch >= 2, the bitmap_spmm path in
+    a vmapped plan). Columns: `us_per_call` is the measured per-query
+    wall-clock (CPU caveat: the ref/interpret kernel cannot skip blocks,
+    so the MEASURED column may invert, exactly like fig20's gather rows);
+    `derived` carries the backend the rule picked, the MODELLED
+    aggregation costs (`select_agg_backend` — the same constants as the
+    fig21 analytic rows; this column carries the claim: grasp beats dense
+    at low density), the block stats, and the operand bytes each mode
+    moved."""
+    import time as _time
+
+    from repro.core.graph import BucketLadder
+    from repro.core.sparsity import block_stats, select_agg_backend
+    from repro.data.graphs import clustered_like
+    from repro.runtime.gnn_server import GraphServe, GraphServeConfig
+
+    in_feats, classes, hidden = 16, 5, 16
+    n = int(cap * 7 / 8)
+    cases = [("dense02", 0.5, 0.30), ("mid01", 0.10, 0.05),
+             ("sparse003", 0.03, 0.0)]
+    rows = []
+
+    def build(mode):
+        sc = GraphServeConfig(ladder=BucketLadder(buckets=(cap,)),
+                              batch_slots=batch_slots)
+        eng = GraphServe(sc, seed=seed)
+        eng.register_model("gcn", GNNConfig(kind="gcn", in_feats=in_feats,
+                                            hidden=hidden,
+                                            num_classes=classes),
+                           agg_backend=mode)
+        eng.warmup()
+        return eng
+
+    engines = {mode: build(mode) for mode in ("dense", "auto")}
+    for label, density, cross in cases:
+        g = clustered_like(num_nodes=n, num_feats=in_feats,
+                           num_classes=classes, within_density=density,
+                           cross_frac=cross, seed=seed)
+        pg = engines["auto"].sc.ladder.pad(g)
+        st = block_stats(pg.norm_adj)
+        choice, dense_s, grasp_s = select_agg_backend(
+            cap, hidden, nnz_blocks=st["nnz_blocks"],
+            max_row_nnz=st["max_row_nnz"])
+        elem_density = g.num_edges / (n * n)
+        for mode, eng in engines.items():
+            gid = eng.attach(g, model="gcn")
+            b0 = eng.metrics["operand_bytes_h2d"]
+            # one untimed dispatch first: the once-per-(graph, version)
+            # work (operand materialization, block compaction, backend
+            # rule) belongs to attach-time, not to the steady-state
+            # per-query latency this row claims to measure
+            eng.query(gid)
+            eng.run()
+            t0 = _time.perf_counter()
+            for _ in range(n_queries):
+                for _ in range(batch_slots):    # full batches per dispatch
+                    eng.query(gid)
+                eng.run()
+            wall = (_time.perf_counter() - t0) / (n_queries * batch_slots)
+            eng.assert_warm()
+            db = eng.metrics["operand_bytes_h2d"] - b0
+            backend = ("dense" if mode == "dense" else choice)
+            rows.append(record(
+                f"grasp_serving/{mode}/{dataset}/{label}", wall,
+                f"backend={backend} model dense={dense_s*1e6:.1f}us "
+                f"grasp={grasp_s*1e6:.1f}us ({dense_s/grasp_s:.2f}x) "
+                f"elem_density={elem_density:.4f} "
+                f"block_density={st['block_density']:.2f} bytes_h2d={db}"))
+            eng.detach(gid)
+    s = engines["auto"].summary()
+    rows.append(record(
+        f"grasp_serving/{dataset}/dispatch", 0.0,
+        f"grasp_batches={s['grasp_batches']} "
+        f"backend_fallbacks={s['backend_fallbacks']} over mixed-density "
+        f"auto traffic, zero recompiles (batched bitmap_spmm plan, "
+        f"batch={batch_slots}; on a CPU host the kernel routing is 'ref', "
+        f"so every grasp REQUEST also counts a backend_fallback — the "
+        f"skip grid only runs on TPU/interpret)"))
+    return rows
+
+
 # ------------------------------------------------------- energy / GraSp
 
 

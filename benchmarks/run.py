@@ -60,6 +60,10 @@ def main() -> None:
     # async pipeline scheduler vs sync run() (DESIGN.md §9): online mixed
     # kind/bucket/tier stream; fewer requests in --quick keeps CI ~fast
     gnn_paper.pipeline_overlap(n_requests=16 if args.quick else 24)
+    # GraSp agg backend vs dense per density (DESIGN.md §10); the smaller
+    # --quick rung still exercises the batched bitmap_spmm dispatch
+    gnn_paper.grasp_serving(cap=512 if args.quick else 1024,
+                            n_queries=2 if args.quick else 4)
     lm_subs.ssd_vs_sequential()
     lm_subs.moe_dispatch_paths()
     lm_subs.serving_bucket_reuse()
@@ -72,7 +76,8 @@ def main() -> None:
         perf = [r for r in ROWS
                 if r["name"].startswith(("serve/", "operand_pipeline/",
                                          "quality_tiers/",
-                                         "pipeline_overlap/"))]
+                                         "pipeline_overlap/",
+                                         "grasp_serving/"))]
         with open(args.bench_json, "w") as f:
             json.dump({"rows": perf}, f, indent=1)
         print(f"# wrote {len(perf)} perf rows -> {args.bench_json}")

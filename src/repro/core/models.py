@@ -18,10 +18,14 @@ Module contracts (what the serving layer relies on):
     python side effect inside the traced fn), never on cache-key inserts.
     `GraphServe.compiled_blobs` sums them; `assert_warm()` is therefore a
     claim about the COMPILER's behavior, not our bookkeeping.
-  * Plan identity — `PlanKey = (cfg, capacity, batch, techniques)`. Params
-    and QuantGr calibrations are runtime arguments, never closed over, so
-    models sharing a key legitimately share one compiled blob, and a
-    quality tier (DESIGN.md §8) is fully identified by its `Techniques`.
+  * Plan identity — `PlanKey = (cfg, capacity, batch, techniques, backend)`.
+    Params and QuantGr calibrations are runtime arguments, never closed
+    over, so models sharing a key legitimately share one compiled blob; a
+    quality tier (DESIGN.md §8) is fully identified by its `Techniques`,
+    and the aggregation backend (DESIGN.md §10: `dense` matmul vs `grasp`
+    block-sparse `bitmap_spmm`) is the key's orthogonal last dimension — a
+    grasp plan's operands always carry a block structure, a dense plan's
+    never do, so the trace structure per key is fixed.
   * Calibration shape invariance — `calibrate_tier` output contains only
     model-shaped arrays (per-layer int8 weights + scalar scales); its
     pytree structure is a function of `GNNConfig` alone, never of the
@@ -41,7 +45,8 @@ from . import effop, layers, masks
 from .graph import PaddedGraph
 from .layers import Techniques
 from .quant import QuantizedLinear, quantize_linear
-from .sparsity import BlockSparse, to_block_sparse
+from .sparsity import (BlockSparse, block_counts, compact_block_sparse,
+                       pad_block_sparse, stack_block_sparse, to_block_sparse)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,21 +168,36 @@ def build_operands(pg: PaddedGraph, cfg: GNNConfig, *, grasp: bool = False,
 def stack_operands(ops: Sequence[GranniteOperands]) -> GranniteOperands:
     """Stack per-graph operands into one batched (B, ...) operand set.
 
-    Batched plans execute vmapped, so every field gains a leading batch dim.
-    GraSp block structures and the per-graph OFFLINE QuantGr form
-    (`ops.quant`, from `calibrate_quant`) have no batched shape — the engine
-    runs those single-graph. Serving-tier QuantGr does not hit this limit:
-    its calibration is model-level and rides the plan's broadcast `quant`
-    argument, never the operands (DESIGN.md §8).
+    Batched plans execute vmapped, so every field gains a leading batch dim
+    — including GraSp block structures: same-bucket structures padded to
+    one `grasp_max_nnz` budget stack via `stack_block_sparse` (all-or-none
+    per batch; a grasp plan's operands always carry one, a dense plan's
+    never do — DESIGN.md §10). Only the per-graph OFFLINE QuantGr form
+    (`ops.quant`, from `calibrate_quant`) has no batched shape — it bakes
+    ONE graph's Â into its QuantizedAgg, so the engine runs it
+    single-graph. Serving-tier QuantGr does not hit this limit: its
+    calibration is model-level (`calibrate_tier`) and rides the plan's
+    broadcast `quant` argument, never the operands (DESIGN.md §8).
     """
-    if any(o.block_sparse is not None or o.quant is not None for o in ops):
-        raise ValueError("block_sparse/quant operands cannot be batched")
+    if any(o.quant is not None for o in ops):
+        raise ValueError(
+            "per-graph offline QuantGr operands (ops.quant, built by "
+            "calibrate_quant) cannot be batched — their QuantizedAgg bakes "
+            "one graph's Â; serve quantized tiers through the model-level "
+            "calibrate_tier path instead (DESIGN.md §8)")
+    with_blocks = [o.block_sparse is not None for o in ops]
+    if any(with_blocks) and not all(with_blocks):
+        raise ValueError(
+            "cannot batch a mix of GraSp and dense operand sets — resolve "
+            "one aggregation backend per batch (DESIGN.md §10)")
     return GranniteOperands(
         norm_adj=jnp.stack([o.norm_adj for o in ops]),
         mask_mult=jnp.stack([o.mask_mult for o in ops]),
         bias_add=jnp.stack([o.bias_add for o in ops]),
         sample_mask=jnp.stack([o.sample_mask for o in ops]),
         mean_mask=jnp.stack([o.mean_mask for o in ops]),
+        block_sparse=(stack_block_sparse([o.block_sparse for o in ops])
+                      if all(with_blocks) else None),
     )
 
 
@@ -369,16 +389,27 @@ class HostOperands:
     host→device operand traffic this form moves (the `operand_bytes_h2d`
     unit), and `fallback` marks a directed GCN/GAT graph that could not
     take the SymG compact path (counted as `cacheg_fallbacks`).
+
+    `grasp` carries the GraSp block structure through the host stage when
+    the request resolved to the grasp backend AND the structure had to be
+    built host-side (`to_block_sparse` + `pad_block_sparse` — the eager
+    path, where the dense Â crosses the link anyway). On the compact path
+    it stays None: the engine derives the structure DEVICE-side from the
+    materialized Â (`BlockCompactor`, zero extra bytes — DESIGN.md §10).
     """
     compact: Optional[CompactOperands] = None
     eager: Optional[GranniteOperands] = None
+    grasp: Optional[BlockSparse] = None
     nbytes: int = 0
     fallback: bool = False
 
 
 def prepare_host_operands(pg: PaddedGraph, cfg: GNNConfig, *,
                           use_cacheg: bool = True,
-                          rng: Optional[np.random.Generator] = None
+                          rng: Optional[np.random.Generator] = None,
+                          grasp_max_nnz: Optional[int] = None,
+                          grasp_bitmap: Optional[np.ndarray] = None,
+                          symmetric: Optional[bool] = None
                           ) -> HostOperands:
     """HOST stage of the operand pipeline: pack (CacheG) or build (eager).
 
@@ -386,13 +417,32 @@ def prepare_host_operands(pg: PaddedGraph, cfg: GNNConfig, *,
     (SymG needs symmetry) and engines running with `use_cacheg=False` fall
     back to the eager dense host build. No device work happens here — a
     scheduler host worker can call this from any thread.
+
+    `grasp_max_nnz` marks a request the engine resolved to the GraSp
+    backend (DESIGN.md §10): the eager path then also compacts the block
+    structure here on the host (`to_block_sparse`, padded to the bucket
+    budget, its bytes counted in `nbytes` since they cross the link —
+    `grasp_bitmap`, when the backend rule already scanned this Â, skips
+    the compaction's own reduction pass); the compact path ignores it —
+    the structure is derived device-side from the materialized Â, which
+    is the whole point of caching it. `symmetric` short-circuits the
+    O(cap²) symmetry check when the caller already ran it on this
+    adjacency (one scan per request, not two).
     """
     from .graph import is_symmetric_adjacency
-    if use_cacheg and (cfg.kind == "sage" or is_symmetric_adjacency(pg.adj)):
+    if use_cacheg and (cfg.kind == "sage"
+                       or (symmetric if symmetric is not None
+                           else is_symmetric_adjacency(pg.adj))):
         co = compact_operands(pg, cfg, rng=rng, check_symmetry=False)
         return HostOperands(compact=co, nbytes=co.nbytes)
     ops = build_operands(pg, cfg, lean=True, rng=rng)
-    return HostOperands(eager=ops, nbytes=operand_nbytes(ops),
+    grasp = None
+    nbytes = operand_nbytes(ops)
+    if grasp_max_nnz is not None and cfg.kind == "gcn":
+        grasp = pad_block_sparse(
+            to_block_sparse(pg.norm_adj, bitmap=grasp_bitmap), grasp_max_nnz)
+        nbytes += grasp.nbytes
+    return HostOperands(eager=ops, grasp=grasp, nbytes=nbytes,
                         fallback=use_cacheg)
 
 
@@ -400,17 +450,22 @@ def realize_operands(ho: HostOperands,
                      materializer: OperandMaterializer) -> GranniteOperands:
     """DEVICE stage counterpart: expand the host product into the dense
     operand set (a jitted materializer call for the compact form, identity
-    for the eager fallback). Dispatch is async under jax, so a host worker
-    calling this merely *enqueues* device work — the dense arrays are
-    created in device memory either way."""
+    for the eager fallback), attaching the host-built GraSp structure when
+    the host stage carried one. Dispatch is async under jax, so a host
+    worker calling this merely *enqueues* device work — the dense arrays
+    are created in device memory either way."""
     if ho.compact is not None:
         return materializer(ho.compact)
+    if ho.grasp is not None:
+        return dataclasses.replace(ho.eager, block_sparse=ho.grasp)
     return ho.eager
 
 
 def operand_nbytes(ops: GranniteOperands) -> int:
     """Host→device bytes of one eagerly built operand set (the five dense
-    fields; GraSp/QuantGr structures never take the batched serve path).
+    fields; a GraSp structure's bytes are accounted where it is built —
+    `prepare_host_operands` on the eager path, zero on the device-derived
+    path — and offline QuantGr never takes the batched serve path).
     Reads `.nbytes` (both jnp and np expose it) — no device→host copy."""
     return int(sum(f.nbytes for f in (
         ops.norm_adj, ops.mask_mult, ops.bias_add, ops.sample_mask,
@@ -494,6 +549,50 @@ def build_agg_quantizer() -> AggQuantizer:
 
     q.fn = jax.jit(_derive)
     return q
+
+
+@dataclasses.dataclass
+class BlockCompactor:
+    """The jitted GraSp structure deriver (DESIGN.md §10), with the same
+    trace accounting as ExecutionPlan / OperandMaterializer / AggQuantizer:
+    jit specializes on Â's shape and the static `max_nnz` budget, so
+    `trace_count` is the number of buckets compiled — GraphServe warms them
+    in `warmup()` and folds the count into the zero-recompile contract.
+
+    Like the int8 Â (`AggQuantizer`), the block structure is DERIVED state:
+    computed device-side from the cached fp32 `norm_adj` once per
+    (graph_id, structure_version), so repeat grasp queries move zero
+    sparse-structure bytes over the host→device link. `counts` is the
+    cheap half of that derivation (one bitmap reduction, no block
+    gather) — enough for the backend rule, so a graph the rule routes
+    dense never pays the full compaction.
+    """
+    fn: Callable = dataclasses.field(default=None, repr=False)
+    counts_fn: Callable = dataclasses.field(default=None, repr=False)
+    trace_count: int = 0
+
+    def __call__(self, norm_adj: jnp.ndarray, *,
+                 max_nnz: int) -> Tuple[BlockSparse, jnp.ndarray]:
+        return self.fn(norm_adj, max_nnz)
+
+    def counts(self, norm_adj: jnp.ndarray) -> jnp.ndarray:
+        return self.counts_fn(norm_adj)
+
+
+def build_block_compactor() -> BlockCompactor:
+    c = BlockCompactor()
+
+    def _compact(norm_adj, max_nnz):
+        c.trace_count += 1                # python side effect: traces only
+        return compact_block_sparse(norm_adj, max_nnz=max_nnz)
+
+    def _counts(norm_adj):
+        c.trace_count += 1                # python side effect: traces only
+        return block_counts(norm_adj)
+
+    c.fn = jax.jit(_compact, static_argnames=("max_nnz",))
+    c.counts_fn = jax.jit(_counts)
+    return c
 
 
 def calibrate_tier(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
@@ -608,12 +707,21 @@ def forward_grannite(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
 # Plan / executor split (DESIGN.md §2)
 # ---------------------------------------------------------------------------
 
-PlanKey = Tuple[GNNConfig, int, int, Techniques]   # (cfg, capacity, batch, t)
+# Aggregation backends (DESIGN.md §10): how a plan executes Â @ H.
+#   dense — one dense matmul over the full (cap, cap) operand.
+#   grasp — the block-sparse bitmap_spmm kernel over a compacted structure
+#           (the operands MUST carry `block_sparse`, padded to the bucket's
+#           grasp_max_nnz budget; dense plans must carry None).
+AGG_BACKENDS = ("dense", "grasp")
+
+# (cfg, capacity, batch, techniques, backend)
+PlanKey = Tuple[GNNConfig, int, int, Techniques, str]
 
 
 @dataclasses.dataclass
 class ExecutionPlan:
-    """One compiled execution recipe: (model kind, NodePad bucket, Techniques).
+    """One compiled execution recipe: (model kind, NodePad bucket,
+    Techniques, aggregation backend).
 
     The plan owns the jitted callable; operands are *runtime arguments*
     (GrAd discipline), so every graph that lands in the same bucket reuses
@@ -626,21 +734,31 @@ class ExecutionPlan:
     zero-recompile contract is asserted against the compiler, not our own
     bookkeeping. Params are runtime arguments (never closed over), so `key`
     is the full identity of the compiled blob: models sharing (cfg,
-    capacity, batch, techniques) can legitimately share one plan. A quality
-    tier (DESIGN.md §8) is a Techniques variant, so tiers get their own
-    plans through the same key — and tiers that alias the same Techniques
-    (GCN's int8 vs int8+grax) share one blob.
+    capacity, batch, techniques, backend) can legitimately share one plan.
+    A quality tier (DESIGN.md §8) is a Techniques variant, so tiers get
+    their own plans through the same key — and tiers that alias the same
+    Techniques (GCN's int8 vs int8+grax) share one blob. `backend` is the
+    orthogonal aggregation dimension (DESIGN.md §10): "grasp" plans run the
+    block-sparse `bitmap_spmm` aggregation and expect operands carrying a
+    budget-padded block structure; "dense" plans expect None there.
     """
     cfg: GNNConfig
     techniques: Techniques
     capacity: int
     batch_size: int = 0                       # 0 = single-graph plan
+    backend: str = "dense"
     fn: Callable = dataclasses.field(default=None, repr=False)
     trace_count: int = 0
+    # Captured AT TRACE TIME for grasp plans: True when the kernel routing
+    # lowered the aggregation through the dense `ref` path (no skip grid).
+    # The compiled blob keeps whatever lowering it was traced with, so
+    # fallback accounting must read this — not the env at dispatch time.
+    grasp_ref_fallback: bool = False
 
     @property
     def key(self) -> PlanKey:
-        return (self.cfg, self.capacity, self.batch_size, self.techniques)
+        return (self.cfg, self.capacity, self.batch_size, self.techniques,
+                self.backend)
 
     def __call__(self, params: Dict, x: jnp.ndarray, ops_: GranniteOperands,
                  quant: Optional[Dict] = None,
@@ -649,8 +767,8 @@ class ExecutionPlan:
 
 
 def build_plan(cfg: GNNConfig, capacity: int, t: Techniques, *,
-               batch_size: int = 0) -> ExecutionPlan:
-    """Compile-on-first-call plan for (cfg.kind, capacity, t).
+               batch_size: int = 0, backend: str = "dense") -> ExecutionPlan:
+    """Compile-on-first-call plan for (cfg.kind, capacity, t, backend).
 
     batch_size > 0 builds the batched executor: x is (B, cap, F) and every
     operand field carries a leading B dim (see stack_operands); the
@@ -661,14 +779,28 @@ def build_plan(cfg: GNNConfig, capacity: int, t: Techniques, *,
     pytree (placeholder or real — same structure either way, see
     `calibrate_tier`) and, for GCN, with TierOperands; a non-QuantGr plan
     with None for both. Flipping between None and a pytree changes the
-    trace structure and would recompile.
+    trace structure and would recompile — the same discipline covers the
+    backend dimension: a "grasp" plan's operands must always carry a
+    block structure padded to ONE budget, a "dense" plan's never any.
+
+    `backend="grasp"` (DESIGN.md §10) executes the aggregation through the
+    block-sparse `bitmap_spmm` path: the tier's Techniques identity is
+    unchanged (tiers are serving policy, the backend is a dispatch
+    decision), the executed techniques just gain the grasp flag.
     """
+    if backend not in AGG_BACKENDS:
+        raise ValueError(f"unknown aggregation backend {backend!r}; pick "
+                         f"from {AGG_BACKENDS}")
+    exec_t = dataclasses.replace(t, grasp=True) if backend == "grasp" else t
     plan = ExecutionPlan(cfg=cfg, techniques=t, capacity=capacity,
-                         batch_size=batch_size)
+                         batch_size=batch_size, backend=backend)
 
     def _forward(params, x, ops_, quant, tier_ops):
         plan.trace_count += 1                 # python side effect: traces only
-        return forward_grannite(params, cfg, x, ops_, t, quant=quant,
+        if backend == "grasp":
+            from repro.kernels.ops import bitmap_spmm_mode
+            plan.grasp_ref_fallback = bitmap_spmm_mode() == "ref"
+        return forward_grannite(params, cfg, x, ops_, exec_t, quant=quant,
                                 tier_ops=tier_ops)
 
     if batch_size > 0:

@@ -78,6 +78,77 @@ def _random_same_class(rng, labels, src, num_classes):
     return order[pick].astype(src.dtype)
 
 
+def clustered_like(*, num_nodes: int, num_feats: int, num_classes: int,
+                   within_density: float = 0.05, cluster: int = 128,
+                   cross_frac: float = 0.0, seed: int = 0,
+                   train_per_class: int = 2,
+                   test_frac: float = 0.35) -> Graph:
+    """Community-clustered graph whose adjacency is block-structured at the
+    MXU tile: nodes [k·cluster, (k+1)·cluster) form one community and edges
+    stay inside it (plus a `cross_frac` fraction drawn uniformly across the
+    whole graph), so after NodePad the Â block bitmap is (near-)
+    block-diagonal — the workload GraSp's block-skip targets (DESIGN.md
+    §10). `within_density` is the directed edge probability inside a
+    community; labels follow communities, features are class-conditioned
+    bag-of-words like `planetoid_like`, so the graphs are learnable enough
+    for calibration/quality audits.
+    """
+    rng = np.random.default_rng(seed)
+    comm = (np.arange(num_nodes) // cluster).astype(np.int64)
+    labels = (comm % num_classes).astype(np.int32)
+    srcs, dsts = [], []
+    for k in range(int(comm.max()) + 1):
+        lo, hi = k * cluster, min(num_nodes, (k + 1) * cluster)
+        sz = hi - lo
+        ne = int(within_density * sz * sz)
+        if ne == 0:
+            continue
+        s = rng.integers(lo, hi, size=ne)
+        d = rng.integers(lo, hi, size=ne)
+        keep = s != d
+        srcs.append(s[keep])
+        dsts.append(d[keep])
+    n_cross = int(cross_frac * sum(s.size for s in srcs)) if srcs else 0
+    if n_cross:
+        s = rng.integers(0, num_nodes, size=n_cross)
+        d = rng.integers(0, num_nodes, size=n_cross)
+        keep = s != d
+        srcs.append(s[keep])
+        dsts.append(d[keep])
+    if srcs:
+        edges = np.stack([np.concatenate(srcs), np.concatenate(dsts)])
+        # symmetrize + dedupe (undirected, SymG/CacheG-compatible)
+        edge_index = np.unique(np.concatenate([edges, edges[::-1]], axis=1),
+                               axis=1).astype(np.int32)
+    else:
+        edge_index = np.zeros((2, 0), np.int32)
+
+    feats = np.zeros((num_nodes, num_feats), dtype=np.float32)
+    words_per_class = max(num_feats // num_classes, 1)
+    nnz = max(num_feats // 16, 4)
+    for i in range(num_nodes):
+        lo = labels[i] * words_per_class
+        own = rng.integers(lo, min(lo + words_per_class, num_feats),
+                           size=nnz * 3 // 4)
+        noise = rng.integers(0, num_feats, size=nnz // 4)
+        feats[i, np.concatenate([own, noise])] = 1.0
+    feats /= np.maximum(feats.sum(axis=1, keepdims=True), 1.0)
+
+    train_mask = np.zeros(num_nodes, dtype=bool)
+    for c in range(num_classes):
+        idx = np.nonzero(labels == c)[0]
+        if idx.size:
+            train_mask[rng.choice(idx, size=min(train_per_class, idx.size),
+                                  replace=False)] = True
+    rest = np.nonzero(~train_mask)[0]
+    test_mask = np.zeros(num_nodes, dtype=bool)
+    if rest.size:
+        test_mask[rng.choice(rest, size=int(num_nodes * test_frac),
+                             replace=False)] = True
+    return Graph(edge_index=edge_index, num_nodes=num_nodes, features=feats,
+                 labels=labels, train_mask=train_mask, test_mask=test_mask)
+
+
 def cora_like(seed: int = 0) -> Graph:
     return planetoid_like(num_nodes=2708, num_edges=5429, num_feats=1433,
                           num_classes=7, seed=seed)

@@ -71,20 +71,45 @@ def int8_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale, w_scale) -> jnp.ndarr
     return out[:m, :n]
 
 
+def bitmap_spmm_mode() -> str:
+    """Which execution form a GraSp dispatch takes right now: "pallas"
+    (real skip grid), "interpret" (same grid, interpreter), or "ref" (plain
+    XLA gather+einsum over the compacted form — the silent dense fallback
+    GraphServe surfaces as `backend_fallbacks`, DESIGN.md §10)."""
+    return _mode()
+
+
 def bitmap_spmm(block_sparse, h: jnp.ndarray) -> jnp.ndarray:
-    """GraSp block-sparse aggregation; `block_sparse` from to_block_sparse."""
+    """GraSp block-sparse aggregation; `block_sparse` from `to_block_sparse`
+    / `compact_block_sparse` (a registered pytree, so its leaves may be
+    runtime tracers — serving plans pass the structure as a vmapped plan
+    argument). The ref path computes on the compacted form with plain XLA
+    ops (no skip grid, padded entries multiplied not skipped): same math,
+    none of the win — observable via `bitmap_spmm_mode()`."""
     mode = _mode()
-    if mode == "ref":
-        from repro.core.sparsity import from_block_sparse
-        dense = jnp.asarray(from_block_sparse(block_sparse))
-        return ref.bitmap_spmm_ref(dense, h)
+    bs = block_sparse.block_size
+    n_out = block_sparse.shape[0]
     n, f = h.shape
-    hp = _pad2(h, block_sparse.block_size, 128)
-    out = _bitmap_spmm_kernel(
-        jnp.asarray(block_sparse.blocks), jnp.asarray(block_sparse.block_cols),
-        jnp.asarray(block_sparse.counts), hp,
-        block_size=block_sparse.block_size, interpret=(mode == "interpret"))
-    return out[: block_sparse.shape[0], :f]
+    hp = _pad2(h, bs, 128)
+    blocks = jnp.asarray(block_sparse.blocks)
+    cols = jnp.asarray(block_sparse.block_cols)
+    counts = jnp.asarray(block_sparse.counts)
+    if mode == "ref":
+        out = ref.bitmap_spmm_block_ref(blocks, cols, counts, hp,
+                                        block_size=bs)
+    else:
+        out = _bitmap_spmm_kernel(blocks, cols, counts, hp, block_size=bs,
+                                  interpret=(mode == "interpret"))
+    return out[:n_out, :f]
+
+
+def bitmap_spmm_batched(block_sparse, h: jnp.ndarray) -> jnp.ndarray:
+    """Batched GraSp aggregation: `block_sparse` is a stacked structure
+    (`stack_block_sparse`, every leaf carrying a leading B) and h is
+    (B, N, F). One vmap over the single-graph entry — the same lowering a
+    batched ExecutionPlan produces when the operands carry a block
+    structure, exposed here for direct callers and benchmarks."""
+    return jax.vmap(bitmap_spmm, in_axes=(0, 0))(block_sparse, h)
 
 
 def gat_attention(h: jnp.ndarray, alpha_dst: jnp.ndarray, alpha_src: jnp.ndarray,

@@ -33,6 +33,31 @@ def bitmap_spmm_ref(dense_a: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
     return (dense_a @ h).astype(h.dtype)
 
 
+def bitmap_spmm_block_ref(blocks: jnp.ndarray, block_cols: jnp.ndarray,
+                          counts: jnp.ndarray, h: jnp.ndarray, *,
+                          block_size: int) -> jnp.ndarray:
+    """GraSp ref path ON the compacted form — pure jnp, so it traces under
+    jit/vmap with the block structure as a runtime argument (the serving
+    plans need exactly that; the old ref densified on the HOST and could
+    not see tracers). Same math as the kernel: gather the H row-blocks each
+    bitmap entry names, MAC the real ones, mask the padded tail.
+
+    This is still a dense-XLA fallback, not a skip win: every padded list
+    entry is fetched and multiplied-by-zero rather than skipped — callers
+    that must observe a GraSp dispatch running without the skip grid check
+    `ops.bitmap_spmm_mode()` (GraphServe counts it as `backend_fallbacks`).
+    """
+    rb, max_nnz = block_cols.shape
+    bs = block_size
+    f = h.shape[1]
+    hb = h.reshape(h.shape[0] // bs, bs, f)
+    gathered = hb[block_cols]                           # (rb, max_nnz, bs, f)
+    blk = blocks.reshape(rb, max_nnz, bs, bs)
+    mask = (jnp.arange(max_nnz)[None, :] < counts[:, None]).astype(blocks.dtype)
+    return jnp.einsum("rk,rkij,rkjf->rif", mask, blk, gathered
+                      ).reshape(rb * bs, f).astype(h.dtype)
+
+
 def gat_attention_ref(h: jnp.ndarray, alpha_dst: jnp.ndarray,
                       alpha_src: jnp.ndarray, bias_add: jnp.ndarray,
                       *, negative_slope: float = 0.2) -> jnp.ndarray:

@@ -22,8 +22,9 @@ of *graphs* — the paper's actual workload:
     into the junk slots (dropped on output) so batch width never changes
     shape — the same trick as the LM server's empty decode slots. Batch
     selection is best-fill (`best_fill_key`): the fullest (model, bucket,
-    tier) key dispatches first, with per-model fairness on ties, so a lone
-    odd request at the head of the queue cannot force a 1-of-N batch.
+    tier, backend) key dispatches first, with per-model fairness on ties,
+    so a lone odd request at the head of the queue cannot force a 1-of-N
+    batch.
   * Pipeline (DESIGN.md §9) — the sync path (`submit`/`query` + `run()`)
     executes host and device stages serially; `scheduler()` attaches the
     async two-stage pipeline (`runtime/scheduler.py`): host worker threads
@@ -40,6 +41,22 @@ of *graphs* — the paper's actual workload:
     buffers. `update()` bumps the version and re-materializes once.
     Directed GCN/GAT graphs fall back to the eager dense upload (counted as
     `cacheg_fallbacks`) — same plans, no extra traces.
+  * GraSp agg backends (DESIGN.md §10) — every request's aggregation
+    dispatches through one of two backends: `dense` (one matmul over the
+    full padded Â) or `grasp` (the block-sparse `bitmap_spmm` kernel over
+    a compacted structure padded to the bucket's `grasp_max_nnz` budget).
+    A model registered with `agg_backend="auto"` routes each graph by the
+    modelled density/cost rule (`core.sparsity.select_agg_backend`);
+    `"grasp"` forces the sparse path where eligible. The block structure
+    is DERIVED state like the int8 Â: computed device-side from the cached
+    fp32 Â once per (graph_id, structure_version) (`BlockCompactor`),
+    host-built (`to_block_sparse`) only on the eager fallback path. The
+    backend joins the batch key, so a dispatch never mixes backends, and
+    warmup pre-traces BOTH backends' plans — mixed dense/grasp traffic
+    replays warm. Every REQUEST whose grasp intent could not run the skip
+    grid (forced-but-ineligible structure, or the kernel routing's dense
+    `ref` fallback) is counted in `backend_fallbacks` — the same
+    per-request unit as `tier_fallbacks`, never silent.
   * Quality tiers (DESIGN.md §8) — every registered model carries a tier
     registry mapping tier names to `Techniques` variants (standard ladder:
     `fp32` exact / `int8` QuantGr / `int8+grax` QuantGr + the kind's GrAx
@@ -55,22 +72,28 @@ of *graphs* — the paper's actual workload:
 Engine contracts (what tests and operators may rely on):
 
   * Zero-recompile — after `warmup()`, `assert_warm()` holds however many
-    mixed-size, mixed-TIER requests arrive, as long as no graph climbs the
-    ladder. Warmup compiles every (model, bucket, tier) plan — quant-tier
-    plans against a placeholder calibration whose pytree structure equals
-    any real one (calibration shapes are model-level, see core.models) —
-    plus one CacheG materializer trace per (bucket, operand-fieldset).
-  * Cache keys — both operand caches are keyed by (graph_id,
+    mixed-size, mixed-TIER, mixed-BACKEND requests arrive, as long as no
+    graph climbs the ladder. Warmup compiles every (model, bucket, tier,
+    backend) plan — quant-tier plans against a placeholder calibration
+    whose pytree structure equals any real one (calibration shapes are
+    model-level, see core.models), grasp plans against a placeholder
+    block structure at the bucket budget — plus one CacheG materializer
+    trace per (bucket, operand-fieldset) and two block-compactor traces
+    (counts reduction + full gather) per grasp-capable bucket.
+  * Cache keys — all three operand caches are keyed by (graph_id,
     structure_version) and NOTHING else. The primary cache holds the
-    tier-agnostic fp32 operands every tier shares; the tier cache holds
-    forms DERIVED from that same version (GCN's int8 Â, quantized once per
-    version so the int8 plan reads 1-byte rows instead of re-quantizing
-    4-byte fp32 every query). `update()` bumping the version is the only
-    invalidation path for both.
-  * Plan identity — plans are keyed by (cfg, bucket, batch, Techniques):
-    tenants sharing a config share blobs, and tier names that alias the
-    same Techniques (GCN int8 vs int8+grax) share too. Tier names are a
-    serving-policy concept; the compiler only ever sees Techniques.
+    tier- and backend-agnostic fp32 operands every request shares; the
+    tier and grasp caches hold forms DERIVED from that same version
+    (GCN's int8 Â, quantized once per version so the int8 plan reads
+    1-byte rows instead of re-quantizing 4-byte fp32 every query; the
+    budget-padded block structure plus the backend decision, compacted
+    once per version). `update()` bumping the version is the only
+    invalidation path for all three.
+  * Plan identity — plans are keyed by (cfg, bucket, batch, Techniques,
+    backend): tenants sharing a config share blobs, and tier names that
+    alias the same Techniques (GCN int8 vs int8+grax) share too. Tier
+    names are a serving-policy concept; the compiler only ever sees
+    Techniques plus the aggregation backend.
 """
 from __future__ import annotations
 
@@ -85,19 +108,23 @@ import numpy as np
 from repro.core.graph import (BucketLadder, Graph, PaddedGraph, pad_graph,
                               stack_padded)
 from repro.core.layers import Techniques
-from repro.core.models import (ExecutionPlan, GNNConfig, GranniteOperands,
-                               PlanKey, TierOperands, build_agg_quantizer,
+from repro.core.models import (ExecutionPlan, GNNConfig,
+                               GranniteOperands, PlanKey, TierOperands,
+                               build_agg_quantizer, build_block_compactor,
                                build_materializer, build_operands, build_plan,
                                calibrate_tier, compact_operands,
                                derive_tier_operands, forward_grannite,
                                init_params, prepare_host_operands,
                                realize_operands, stack_operands,
                                stack_tier_operands)
+from repro.core.sparsity import block_stats, grasp_max_nnz, select_agg_backend
 
-# Per-kind serving techniques for models registered WITHOUT a tier ladder:
-# the full dense-path stacks minus GraSp (whose block structures have no
-# batched form — see stack_operands; QuantGr is tier-servable via the
-# model-level calibration path, DESIGN.md §8).
+# Per-kind serving techniques for models registered WITHOUT a tier ladder.
+# GraSp is deliberately NOT a technique flag here: block-sparse aggregation
+# is an execution *backend* the engine dispatches per (graph, bucket)
+# (`agg_backend=` on register_model, DESIGN.md §10), not part of a tier's
+# quality identity; QuantGr is tier-servable via the model-level
+# calibration path (DESIGN.md §8).
 DEFAULT_TECHNIQUES: Dict[str, Techniques] = {
     "gcn": Techniques(stagr=True, grad_dynamic=True, graphsplit=True),
     "gat": Techniques.full_gat(),
@@ -106,16 +133,21 @@ DEFAULT_TECHNIQUES: Dict[str, Techniques] = {
 
 STANDARD_TIERS = ("fp32", "int8", "int8+grax")
 
-BatchKey = Tuple[str, int, str]                  # (model, bucket, tier)
+# Aggregation-backend serving modes (register_model(agg_backend=...)):
+# "dense" never dispatches GraSp, "auto" routes per graph by the modelled
+# density/cost rule, "grasp" forces the sparse path where eligible.
+AGG_BACKEND_MODES = ("dense", "auto", "grasp")
+
+BatchKey = Tuple[str, int, str, str]     # (model, bucket, tier, agg backend)
 
 
 def best_fill_key(stats: Dict[BatchKey, Tuple[int, int]], batch_slots: int,
                   last_dispatch: Optional[Dict[str, int]] = None) -> BatchKey:
     """Pick the batch key to dispatch next (DESIGN.md §9).
 
-    `stats` maps each pending (model, bucket, tier) key to `(count,
-    head_order)` — how many requests wait under it and the arrival order of
-    its oldest one. Selection order:
+    `stats` maps each pending (model, bucket, tier, backend) key to
+    `(count, head_order)` — how many requests wait under it and the arrival
+    order of its oldest one. Selection order:
 
       1. best fill — most waiting requests, capped at `batch_slots` (a key
          with 9 waiting fills a 4-slot batch no better than one with 4);
@@ -140,7 +172,7 @@ def pending_stats(reqs: Sequence["GNNRequest"]
     """Fold a pending-request sequence into `best_fill_key` stats."""
     stats: Dict[BatchKey, Tuple[int, int]] = {}
     for i, r in enumerate(reqs):
-        k = (r.model, r.bucket, r.tier)
+        k = (r.model, r.bucket, r.tier, r.backend)
         c = stats.get(k)
         stats[k] = (1, i) if c is None else (c[0] + 1, c[1])
     return stats
@@ -198,6 +230,7 @@ class GNNRequest:
     bucket: int
     submitted_s: float
     tier: str = "fp32"                     # resolved tier (post-fallback)
+    backend: str = "dense"                 # resolved agg backend (§10)
     tier_ops: Optional[TierOperands] = None  # derived (e.g. GCN int8 Â)
     finished_s: float = 0.0
     done: bool = False
@@ -220,6 +253,7 @@ class _ModelEntry:
     params: Dict
     tiers: Dict[str, Techniques]           # tier name -> execution variant
     default_tier: str
+    agg_backend: str = "dense"             # "dense" | "auto" | "grasp" (§10)
     # once per (model, tier): calibrate_tier pytrees for QuantGr tiers, and
     # the measured accuracy_delta_vs_fp32 for every non-fp32 tier
     calibrations: Dict[str, Dict] = dataclasses.field(default_factory=dict)
@@ -242,13 +276,18 @@ class GraphServe:
         self._plans: Dict[PlanKey, ExecutionPlan] = {}
         self._materializer = build_materializer()
         self._agg_quantizer = build_agg_quantizer()
+        self._block_compactor = build_block_compactor()
         # CacheG device-resident operand cache: (graph_id, structure_version)
         # -> materialized GranniteOperands living in device memory. update()
         # bumps the version and evicts, so stale structure can never serve.
         # The tier cache holds DERIVED forms of the same version (GCN's int8
-        # Â) under the same key — same lifecycle, same invalidation.
+        # Â) under the same key — same lifecycle, same invalidation — and
+        # the grasp cache holds the third derived form: the resolved agg
+        # backend plus (when "grasp") the budget-padded block structure,
+        # compacted device-side from the cached fp32 Â (DESIGN.md §10).
         self._operand_cache: Dict[Tuple[int, int], GranniteOperands] = {}
         self._tier_operand_cache: Dict[Tuple[int, int], TierOperands] = {}
+        self._grasp_cache: Dict[Tuple[int, int], Tuple[str, object]] = {}
         self._graph_version: Dict[int, int] = {}
         self._warm_blobs: Optional[int] = None
         self._uid = 0
@@ -267,7 +306,8 @@ class GraphServe:
                         "device_busy_s": 0.0,
                         "operand_bytes_h2d": 0, "operand_cache_hits": 0,
                         "operand_cache_misses": 0, "cacheg_fallbacks": 0,
-                        "tier_fallbacks": 0}
+                        "tier_fallbacks": 0, "backend_fallbacks": 0,
+                        "grasp_batches": 0}
 
     def _count(self, name: str, delta=1) -> None:
         with self._lock:
@@ -276,7 +316,8 @@ class GraphServe:
     # ------------------------------------------------------------------ setup
     def register_model(self, name: str, cfg: GNNConfig, params: Optional[Dict] = None,
                        *, techniques: Optional[Techniques] = None,
-                       tiers=None, default_tier: str = "fp32") -> None:
+                       tiers=None, default_tier: str = "fp32",
+                       agg_backend: str = "dense") -> None:
         """Register a model with its quality-tier registry.
 
         `tiers` may be: None (single-tier registry {"fp32": techniques or
@@ -284,6 +325,15 @@ class GraphServe:
         through `tier_techniques(cfg.kind)`); or a full {name: Techniques}
         dict. The registry must always contain "fp32" — it is the accuracy
         reference and the calibration-fallback target, not just a tier.
+
+        `agg_backend` picks the model's GraSp dispatch mode (DESIGN.md
+        §10): "dense" (default — never block-sparse), "auto" (per-graph
+        density/cost rule), or "grasp" (forced where the structure fits the
+        bucket budget; ineligible graphs serve dense, counted in
+        `backend_fallbacks`). Only GCN aggregation has a block-sparse form
+        today — other kinds (and QuantGr tiers, whose aggregation is the
+        cached int8 Â) always resolve dense, so a non-"dense" mode on them
+        is a no-op, not an error.
         """
         import jax
         if params is None:
@@ -320,35 +370,44 @@ class GraphServe:
         if default_tier not in registry:
             raise ValueError(f"default tier {default_tier!r} not in "
                              f"{sorted(registry)}")
+        if agg_backend not in AGG_BACKEND_MODES:
+            raise ValueError(f"unknown agg_backend mode {agg_backend!r}; "
+                             f"pick from {AGG_BACKEND_MODES}")
         self.models[name] = _ModelEntry(cfg=cfg, params=params,
                                         tiers=registry,
-                                        default_tier=default_tier)
+                                        default_tier=default_tier,
+                                        agg_backend=agg_backend)
 
-    def plan_for(self, model: str, bucket: int,
-                 tier: Optional[str] = None) -> ExecutionPlan:
+    def plan_for(self, model: str, bucket: int, tier: Optional[str] = None,
+                 backend: str = "dense") -> ExecutionPlan:
         # keyed by the plan's full identity, not the (model, tier) names:
         # params and calibrations are runtime args, so models/tiers with
-        # identical (cfg, techniques) share one compiled blob per bucket
+        # identical (cfg, techniques, backend) share one compiled blob per
+        # bucket
         e = self.models[model]
         t = e.tiers[tier if tier is not None else e.default_tier]
-        key: PlanKey = (e.cfg, bucket, self.sc.batch_slots, t)
+        key: PlanKey = (e.cfg, bucket, self.sc.batch_slots, t, backend)
         if key not in self._plans:
             self._plans[key] = build_plan(e.cfg, bucket, t,
-                                          batch_size=self.sc.batch_slots)
+                                          batch_size=self.sc.batch_slots,
+                                          backend=backend)
         return self._plans[key]
 
     @property
     def compiled_blobs(self) -> int:
         """Actual jit traces: all plans + the CacheG materializer (one trace
         per bucket × operand-fieldset) + the tier-operand deriver (one per
-        bucket with a QuantGr GCN tier), all compiled during warmup."""
+        bucket with a QuantGr GCN tier) + the GraSp block compactor (two
+        per bucket with a grasp-capable model — the counts reduction and
+        the full gather), all compiled during warmup."""
         return (sum(p.trace_count for p in self._plans.values())
                 + self._materializer.trace_count
-                + self._agg_quantizer.trace_count)
+                + self._agg_quantizer.trace_count
+                + self._block_compactor.trace_count)
 
     def warmup(self, *, buckets: Optional[Tuple[int, ...]] = None) -> int:
-        """Compile every (model, bucket, tier) plan — and, with CacheG
-        enabled, every (bucket, fieldset) materializer — once with
+        """Compile every (model, bucket, tier, backend) plan — and, with
+        CacheG enabled, every (bucket, fieldset) materializer — once with
         placeholder inputs.
 
         QuantGr tiers not yet calibrated warm against a THROWAWAY
@@ -357,6 +416,13 @@ class GraphServe:
         compiled here replays warm when the real calibration arrives — the
         placeholder is never stored, and an uncalibrated tier still falls
         back to fp32 at query time.
+
+        Models with a non-"dense" `agg_backend` additionally warm the
+        GraSp side per (bucket, non-quant tier): the per-bucket block
+        compactor plus the grasp-backend plan, called with a placeholder
+        block structure at the bucket's `grasp_max_nnz` budget — so mixed
+        dense/grasp traffic after warmup replays entirely warm however the
+        per-graph rule routes it (DESIGN.md §10).
         """
         buckets = buckets if buckets is not None else self.sc.ladder.buckets
         b = self.sc.batch_slots
@@ -377,29 +443,46 @@ class GraphServe:
                     single = build_operands(pg, e.cfg, lean=True)
                 ops = stack_operands([single] * b)
                 x = jnp.zeros((b, bucket, e.cfg.in_feats), jnp.float32)
+                ops_grasp = None
+                if self._grasp_capable(e):
+                    # placeholder block structure at the bucket budget —
+                    # these calls also warm the per-bucket block compactor
+                    # (both halves: the counts reduction the backend rule
+                    # reads, and the full gather grasp graphs pay)
+                    self._block_compactor.counts(single.norm_adj)
+                    bsp, _ = self._block_compactor(
+                        single.norm_adj, max_nnz=grasp_max_nnz(bucket))
+                    ops_grasp = stack_operands(
+                        [dataclasses.replace(single, block_sparse=bsp)] * b)
                 for tier, t in e.tiers.items():
-                    # alias tiers (e.g. GCN int8+grax == int8) share a plan
-                    # AND a calibration structure — exercising them again
-                    # would just recompute placeholders for zero new traces
-                    plan = self.plan_for(name, bucket, tier)
-                    if (name, plan.key) in warmed:
-                        continue
-                    warmed.add((name, plan.key))
-                    quant = e.calibrations.get(tier)
-                    if quant is None and t.quantgr:
-                        if (name, tier) not in warm_cal:
-                            x1 = jnp.zeros((bucket, e.cfg.in_feats),
-                                           jnp.float32)
-                            warm_cal[(name, tier)] = calibrate_tier(
-                                e.params, e.cfg, x1, single)
-                        quant = warm_cal[(name, tier)]
-                    tops = None
-                    if self._needs_tier_ops(e, tier):
-                        # also warms the per-bucket tier-operand deriver
-                        tops = stack_tier_operands(
-                            [self._agg_quantizer(single.norm_adj)] * b)
-                    out = plan(e.params, x, ops, quant, tops)
-                    out.block_until_ready()
+                    backends = ("dense",) if (ops_grasp is None or t.quantgr
+                                              ) else ("dense", "grasp")
+                    for backend in backends:
+                        # alias tiers (e.g. GCN int8+grax == int8) share a
+                        # plan AND a calibration structure — exercising
+                        # them again would just recompute placeholders for
+                        # zero new traces
+                        plan = self.plan_for(name, bucket, tier, backend)
+                        if (name, plan.key) in warmed:
+                            continue
+                        warmed.add((name, plan.key))
+                        quant = e.calibrations.get(tier)
+                        if quant is None and t.quantgr:
+                            if (name, tier) not in warm_cal:
+                                x1 = jnp.zeros((bucket, e.cfg.in_feats),
+                                               jnp.float32)
+                                warm_cal[(name, tier)] = calibrate_tier(
+                                    e.params, e.cfg, x1, single)
+                            quant = warm_cal[(name, tier)]
+                        tops = None
+                        if self._needs_tier_ops(e, tier):
+                            # also warms the per-bucket tier-operand deriver
+                            tops = stack_tier_operands(
+                                [self._agg_quantizer(single.norm_adj)] * b)
+                        out = plan(e.params, x,
+                                   ops_grasp if backend == "grasp" else ops,
+                                   quant, tops)
+                        out.block_until_ready()
         self._warm_blobs = self.compiled_blobs
         return self._warm_blobs
 
@@ -485,16 +568,108 @@ class GraphServe:
         so the trace structure never flips."""
         return e.cfg.kind == "gcn" and e.tiers[tier].quantgr
 
+    @staticmethod
+    def _grasp_capable(e: _ModelEntry) -> bool:
+        """Whether this model can ever dispatch the GraSp backend: a
+        non-"dense" mode AND a kind whose aggregation has a block-sparse
+        form (GCN's Â @ H today)."""
+        return e.agg_backend != "dense" and e.cfg.kind == "gcn"
+
+    def _backend_from_stats(self, e: _ModelEntry, capacity: int,
+                            stats: Dict) -> str:
+        """Run the density/cost rule (DESIGN.md §10) for one graph at one
+        bucket. Pure decision — `backend_fallbacks` accounting happens
+        per REQUEST at the resolution sites (mirroring how
+        `tier_fallbacks` counts), never here, so cached decisions and
+        fresh ones count identically."""
+        mode = "grasp" if e.agg_backend == "grasp" else "auto"
+        choice, _, _ = select_agg_backend(
+            capacity, e.cfg.hidden, nnz_blocks=stats["nnz_blocks"],
+            max_row_nnz=stats["max_row_nnz"], mode=mode)
+        return choice
+
+    def _count_forced_fallback(self, e: _ModelEntry, backend: str) -> None:
+        """One REQUEST under a forced-grasp model resolved dense (its
+        structure exceeds the bucket budget): count it, per request —
+        asked for sparse, quietly ran dense, so it must be observable
+        (`backend_fallbacks`, same unit as `tier_fallbacks`)."""
+        if e.agg_backend == "grasp" and backend == "dense":
+            self._count("backend_fallbacks")
+
+    def _derive_grasp(self, e: _ModelEntry, capacity: int, norm_adj
+                      ) -> Tuple[str, object]:
+        """Counts-first device-side derivation shared by the cached query
+        path and one-shot compact submits: one cheap jitted bitmap
+        reduction feeds the backend rule, and ONLY a grasp-routed graph
+        pays the full block gather — so eligibility is always judged
+        against the exact (materialized) Â the gather would read, and a
+        dense-routed decision costs a reduction, not a structure."""
+        ct = np.asarray(self._block_compactor.counts(norm_adj))
+        stats = {"nnz_blocks": int(ct.sum()),
+                 "max_row_nnz": int(ct.max()) if ct.size else 0}
+        backend = self._backend_from_stats(e, capacity, stats)
+        bsp = None
+        if backend == "grasp":
+            bsp, _ = self._block_compactor(norm_adj,
+                                           max_nnz=grasp_max_nnz(capacity))
+        return backend, bsp
+
+    def _resolve_and_build(self, model: str, tier: str, pg: PaddedGraph
+                           ) -> Tuple[str, GranniteOperands]:
+        """One-shot intake: resolve this request's agg backend AND build
+        its device-resident operands, deriving the backend rule's inputs
+        wherever they are cheapest. QuantGr tiers aggregate through the
+        cached int8 Â, not the fp32 matmul, so they always resolve dense
+        without any scan. On the CacheG compact path the decision comes
+        from the jitted counts reduction over the MATERIALIZED Â — no
+        host O(cap²) pass, and eligibility is checked against the exact
+        matrix the block gather reads (same discipline as prepare_query).
+        The eager path decides from host-side `block_stats`, whose bitmap
+        the host block build then reuses instead of re-scanning."""
+        e = self.models[model]
+        if not self._grasp_capable(e) or e.tiers[tier].quantgr:
+            return "dense", self._device_operands(model, pg)
+        from repro.core.graph import is_symmetric_adjacency
+        if self.sc.use_cacheg and is_symmetric_adjacency(pg.adj):
+            # compact + materialize (symmetry already checked, scan once)
+            ops = self._device_operands(model, pg, symmetric=True)
+            backend, bsp = self._derive_grasp(e, pg.capacity, ops.norm_adj)
+            self._count_forced_fallback(e, backend)
+            if backend == "grasp":
+                ops = dataclasses.replace(ops, block_sparse=bsp)
+            return backend, ops
+        stats = block_stats(pg.norm_adj)
+        backend = self._backend_from_stats(e, pg.capacity, stats)
+        self._count_forced_fallback(e, backend)
+        return backend, self._device_operands(
+            model, pg, backend=backend, grasp_bitmap=stats["bitmap"],
+            symmetric=False if self.sc.use_cacheg else None)
+
     # ------------------------------------------------------------------ intake
-    def _device_operands(self, model: str, pg: PaddedGraph) -> GranniteOperands:
+    def _device_operands(self, model: str, pg: PaddedGraph, *,
+                         backend: str = "dense", grasp_bitmap=None,
+                         symmetric: Optional[bool] = None
+                         ) -> GranniteOperands:
         """Build one graph's device-resident operands: the HOST stage
         (`prepare_host_operands` — CacheG compact packing, or the eager
         dense build for directed GCN/GAT graphs, counted as
         `cacheg_fallbacks`) followed immediately by the DEVICE stage
         (`realize_operands`). The pipeline scheduler runs the same two
-        calls, just on a host worker thread."""
+        calls, just on a host worker thread.
+
+        A grasp-backend request on the eager host path additionally
+        builds and ships the block structure here (`HostOperands.grasp`,
+        bytes counted, DESIGN.md §10). Compact-path grasp derivation does
+        NOT happen here: the callers that own it (`_resolve_and_build`,
+        `prepare_query`) run the device-side counts check first, so no
+        structure is ever gathered without its eligibility verified
+        against the same materialized Â."""
+        budget = grasp_max_nnz(pg.capacity) if backend == "grasp" else None
         ho = prepare_host_operands(pg, self.models[model].cfg,
-                                   use_cacheg=self.sc.use_cacheg)
+                                   use_cacheg=self.sc.use_cacheg,
+                                   grasp_max_nnz=budget,
+                                   grasp_bitmap=grasp_bitmap,
+                                   symmetric=symmetric)
         self._count("operand_bytes_h2d", ho.nbytes)
         if ho.fallback:
             self._count("cacheg_fallbacks")
@@ -505,20 +680,27 @@ class GraphServe:
                  tier: Optional[str] = None,
                  tier_ops: Optional[TierOperands] = None,
                  tier_resolved: bool = False,
+                 backend: Optional[str] = None,
                  submitted_s: Optional[float] = None) -> GNNRequest:
-        """Host-stage tail shared by every intake path: resolve the tier,
-        realize operands if the caller didn't, assign the uid. Returns the
-        ready-to-dispatch request WITHOUT touching the engine queue — the
-        sync path pushes it (`_push`), the pipeline scheduler hands it to
-        its own ready stage. `submitted_s` lets the scheduler pin latency
-        accounting to intake time (queue wait included) rather than to
-        host-stage completion."""
+        """Host-stage tail shared by every intake path: resolve the tier
+        and agg backend, realize operands if the caller didn't, assign the
+        uid. Returns the ready-to-dispatch request WITHOUT touching the
+        engine queue — the sync path pushes it (`_push`), the pipeline
+        scheduler hands it to its own ready stage. `submitted_s` lets the
+        scheduler pin latency accounting to intake time (queue wait
+        included) rather than to host-stage completion."""
         now = time.perf_counter()
         submitted_s = submitted_s if submitted_s is not None else now
         if not tier_resolved:
             tier = self._resolve_tier(model, tier)
-        if ops is None:
-            ops = self._device_operands(model, pg)
+        if backend is None:
+            backend, ops = self._resolve_and_build(model, tier, pg)
+        elif ops is None:
+            # a resolved backend implies the caller owned the grasp
+            # derivation discipline (counts-checked structure attached for
+            # grasp, none for dense) — building operands here would skip it
+            raise ValueError("callers resolving the backend themselves "
+                             "must pass the operands they derived it for")
         if tier_ops is None and self._needs_tier_ops(self.models[model], tier):
             # one-shot request: derive without caching (nothing to key on)
             tier_ops = self._agg_quantizer(ops.norm_adj)
@@ -529,7 +711,7 @@ class GraphServe:
                 self.metrics["first_submit_s"] = submitted_s
         return GNNRequest(uid=uid, model=model, pg=pg, ops=ops,
                           bucket=pg.capacity, submitted_s=submitted_s,
-                          tier=tier, tier_ops=tier_ops)
+                          tier=tier, backend=backend, tier_ops=tier_ops)
 
     def _push(self, req: GNNRequest) -> int:
         self.queue.append(req)
@@ -580,6 +762,7 @@ class GraphServe:
             key = (graph_id, self._graph_version.pop(graph_id, -1))
             self._operand_cache.pop(key, None)
             self._tier_operand_cache.pop(key, None)
+            self._grasp_cache.pop(key, None)
             self.graphs.pop(graph_id, None)
 
     def update(self, graph_id: int, edge_index: np.ndarray, num_nodes: int,
@@ -597,6 +780,7 @@ class GraphServe:
             ver = self._graph_version[graph_id]
             self._operand_cache.pop((graph_id, ver), None)
             self._tier_operand_cache.pop((graph_id, ver), None)
+            self._grasp_cache.pop((graph_id, ver), None)
             self._graph_version[graph_id] = ver + 1
             if rebucketed:
                 self.metrics["rebucket_events"] += 1
@@ -613,7 +797,13 @@ class GraphServe:
         same fp32 operands feed every tier's plan, and the int8 Â that
         QuantGr GCN tiers read is quantized from them once per structure
         version into the tier cache below — so mixed-tier traffic over one
-        graph shares one entry of each.
+        graph shares one entry of each. The GraSp structure is the third
+        derived form (DESIGN.md §10): the backend rule runs once per
+        (graph, version) over counts the block compactor derives from the
+        CACHED Â — device-side, zero extra host→device bytes — and both
+        the decision and (when grasp) the budget-padded structure are
+        cached under the same key, invalidated by the same `update()`
+        bump, released by the same `detach()`.
 
         Thread discipline (the scheduler calls this from host workers while
         `update()` may arrive concurrently): the (model, pg, version)
@@ -643,7 +833,8 @@ class GraphServe:
             self._count("operand_cache_hits")
         tops = None
         resolved = self._resolve_tier(model, tier)
-        if self._needs_tier_ops(self.models[model], resolved):
+        e = self.models[model]
+        if self._needs_tier_ops(e, resolved):
             # derived-form hit path: the int8 Â is structure work too —
             # once per (graph, version), never per query
             with self._lock:
@@ -653,8 +844,24 @@ class GraphServe:
                 with self._lock:
                     if self._graph_version.get(graph_id) == ver:
                         self._tier_operand_cache[key] = tops
+        backend = "dense"
+        if self._grasp_capable(e) and not e.tiers[resolved].quantgr:
+            # derived-form hit path for the block structure: rule + compact
+            # once per (graph, version) from the device-resident Â
+            with self._lock:
+                cached = self._grasp_cache.get(key)
+            if cached is None:
+                cached = self._derive_grasp(e, pg.capacity, ops.norm_adj)
+                with self._lock:
+                    if self._graph_version.get(graph_id) == ver:
+                        self._grasp_cache[key] = cached
+            backend, bsp = cached
+            self._count_forced_fallback(e, backend)   # per request, cached
+            if backend == "grasp":                    # decision or not
+                ops = dataclasses.replace(ops, block_sparse=bsp)
         return self._prepare(model, pg, ops, tier=resolved, tier_ops=tops,
-                             tier_resolved=True, submitted_s=submitted_s)
+                             tier_resolved=True, backend=backend,
+                             submitted_s=submitted_s)
 
     def query(self, graph_id: int, *, tier: Optional[str] = None) -> int:
         """Enqueue inference over an attached graph (see `prepare_query`)."""
@@ -669,13 +876,14 @@ class GraphServe:
     def _run_batch(self) -> None:
         # best-filling key first (not queue[0]'s — see best_fill_key): a
         # lone odd request at the head no longer forces a 1-of-N dispatch
-        # while fully-fillable keys wait behind it. Tier is part of the
-        # batch key: tiers are different compiled plans, so a slot can
-        # never mix execution variants.
+        # while fully-fillable keys wait behind it. Tier AND agg backend
+        # are part of the batch key: both select different compiled plans,
+        # so a slot can never mix execution variants.
         key = best_fill_key(pending_stats(self.queue), self.sc.batch_slots,
                             self._last_dispatch)
         batch = [r for r in self.queue
-                 if (r.model, r.bucket, r.tier) == key][: self.sc.batch_slots]
+                 if (r.model, r.bucket, r.tier, r.backend) == key
+                 ][: self.sc.batch_slots]
         taken = {r.uid for r in batch}
         self.queue = [r for r in self.queue if r.uid not in taken]
         self._execute_batch(batch)
@@ -684,11 +892,16 @@ class GraphServe:
         """DEVICE stage: one fixed-width dispatch of same-key requests.
 
         Called with 1..batch_slots requests sharing one (model, bucket,
-        tier) key, from exactly ONE thread at a time (the sync `run()`
-        loop, or the pipeline scheduler's dispatcher). Junk slots repeat a
-        real request so batch width never changes shape; their outputs are
-        dropped. `device_busy_s` accumulates the wall-clock of this stage —
-        the pipeline's device-idle fraction is measured against it.
+        tier, backend) key, from exactly ONE thread at a time (the sync
+        `run()` loop, or the pipeline scheduler's dispatcher). Junk slots
+        repeat a real request so batch width never changes shape; their
+        outputs are dropped. `device_busy_s` accumulates the wall-clock of
+        this stage — the pipeline's device-idle fraction is measured
+        against it. A grasp dispatch whose plan was TRACED through the
+        `ref` kernel routing ran the aggregation dense (plain XLA over the
+        block form, no skip grid) — every request in it is counted as
+        `backend_fallbacks` so the degradation is observable, never
+        invisible.
         """
         head = batch[0]
         b = self.sc.batch_slots
@@ -703,9 +916,13 @@ class GraphServe:
         ops = stack_operands([r.ops for r in slots])
         tops = (stack_tier_operands([r.tier_ops for r in slots])
                 if slots[0].tier_ops is not None else None)
-        logits = self.plan_for(head.model, head.bucket, head.tier)(
-            e.params, x, ops, e.calibrations.get(head.tier), tops)
+        plan = self.plan_for(head.model, head.bucket, head.tier,
+                             head.backend)
+        logits = plan(e.params, x, ops, e.calibrations.get(head.tier), tops)
         logits.block_until_ready()
+        # trace-time capture, not a dispatch-time env read: the compiled
+        # blob keeps whatever lowering it was traced with
+        ran_dense_fallback = plan.grasp_ref_fallback
 
         now = time.perf_counter()
         host_logits = np.asarray(logits)
@@ -723,6 +940,13 @@ class GraphServe:
             self.metrics["batches"] += 1
             self.metrics["slots_filled"] += len(batch)
             self.metrics["slots_total"] += b
+            if head.backend == "grasp":
+                self.metrics["grasp_batches"] += 1
+                if ran_dense_fallback:
+                    # per REQUEST (same unit as tier_fallbacks and the
+                    # forced-but-ineligible count): every request in this
+                    # dispatch ran its aggregation dense under ref routing
+                    self.metrics["backend_fallbacks"] += len(batch)
             self.metrics["device_busy_s"] += now - t0
             self.metrics["last_finish_s"] = now
             self._last_dispatch[head.model] = self._dispatch_serial
@@ -785,6 +1009,15 @@ class GraphServe:
             "operand_cache_misses": self.metrics["operand_cache_misses"],
             "cacheg_fallbacks": self.metrics["cacheg_fallbacks"],
             "tier_fallbacks": self.metrics["tier_fallbacks"],
+            # GraSp backend dispatch (DESIGN.md §10): per-model serving
+            # mode, how many batches took the sparse path, and how many
+            # REQUESTS with grasp intent quietly ran dense — forced-mode
+            # ineligible structure or ref-routing dispatch (same
+            # per-request unit as tier_fallbacks)
+            "agg_backends": {name: e.agg_backend
+                             for name, e in self.models.items()},
+            "grasp_batches": self.metrics["grasp_batches"],
+            "backend_fallbacks": self.metrics["backend_fallbacks"],
             "tiers": self.tier_summary(),
             "accuracy_delta_vs_fp32": {
                 name: dict(e.accuracy_delta)

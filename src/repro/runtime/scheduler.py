@@ -9,9 +9,10 @@ exists to hide. The scheduler overlaps them as a two-stage pipeline:
   intake ──▶ HOST stage                 ──▶ ready ──▶ DEVICE stage
   bounded    worker threads running         bounded   one dispatcher thread
   queue      engine.prepare_submit /        buffer    grouping ready requests
-             prepare_query (ladder.pad,     (per      by (model, bucket, tier)
-             operand build, CompactOperands batch     and driving
-             packing, CacheG lookups)       key)      engine._execute_batch
+             prepare_query (ladder.pad,     (per      by (model, bucket,
+             operand build, CompactOperands batch     tier, agg backend) and
+             packing, CacheG lookups)       key)      driving
+                                                      engine._execute_batch
 
 Policies (all per `PipelineConfig`):
 
@@ -223,7 +224,7 @@ class PipelineScheduler:
                 self._cond.notify_all()
 
     def _push_ready_locked(self, ticket: int, req: GNNRequest) -> None:
-        key = (req.model, req.bucket, req.tier)
+        key = (req.model, req.bucket, req.tier, req.backend)
         self._ready.setdefault(key, deque()).append(
             (self._arrival_serial, time.perf_counter(), req))
         self._arrival_serial += 1

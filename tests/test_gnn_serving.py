@@ -1,5 +1,7 @@
 """GraphServe engine: bucket ladder, zero-recompile contract, batched
 correctness, GrAd re-bucket policy, and the serving benchmark row."""
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -172,8 +174,9 @@ def test_plan_trace_count_tracks_compiles():
     plan(params, x, ops)                    # warm replay: no new trace
     assert plan.trace_count == 1
     # params are runtime args, so the plan's identity is the full config —
-    # models sharing (cfg, capacity, batch, techniques) share one blob
-    assert plan.key == (cfg, 128, 2, DEFAULT_TECHNIQUES["gcn"])
+    # models sharing (cfg, capacity, batch, techniques, backend) share one
+    # blob; "dense" is the default aggregation backend (DESIGN.md §10)
+    assert plan.key == (cfg, 128, 2, DEFAULT_TECHNIQUES["gcn"], "dense")
 
 
 def test_identical_models_share_one_blob():
@@ -195,13 +198,25 @@ def test_identical_models_share_one_blob():
     assert len(eng.finished) == 2
 
 
-def test_stack_operands_rejects_unbatchable():
+def test_stack_operands_batches_grasp_rejects_offline_quant():
+    """GraSp structures batch (DESIGN.md §10: leaves gain a leading B);
+    only the per-graph OFFLINE QuantGr form stays un-batchable, with an
+    error naming its source (`calibrate_quant`)."""
     pg = pad_graph(_graph(50, 0), capacity=128)
     cfg = GNNConfig(kind="gcn", in_feats=IN_FEATS, hidden=16,
                     num_classes=CLASSES)
     ops = build_operands(pg, cfg, grasp=True)
-    with pytest.raises(ValueError):
-        stack_operands([ops, ops])
+    stacked = stack_operands([ops, ops])
+    assert stacked.block_sparse is not None
+    assert stacked.block_sparse.blocks.shape == \
+        (2,) + tuple(ops.block_sparse.blocks.shape)
+    assert stacked.norm_adj.shape == (2, 128, 128)
+    bad = dataclasses.replace(ops, block_sparse=None, quant={"l1": object()})
+    with pytest.raises(ValueError, match="calibrate_quant"):
+        stack_operands([bad, bad])
+    # mixed grasp/dense sets cannot share one vmapped dispatch
+    with pytest.raises(ValueError, match="mix"):
+        stack_operands([ops, dataclasses.replace(ops, block_sparse=None)])
 
 
 # The seeded SymG round-trip sweep that lived here was promoted to a real

@@ -1,16 +1,19 @@
-"""Property-based differential serving suite (DESIGN.md §9).
+"""Property-based differential serving suite (DESIGN.md §9 / §10).
 
 Hypothesis-driven randomized properties over the whole serving stack:
 random graphs × kinds (GCN/GAT/SAGE) × quality tiers served through the
 deterministic pipeline scheduler must equal the sequential single-request
-forward; the CacheG/SymG pack→unpack transfer forms must round-trip
-losslessly; NodePad's admission rule must be monotone. Skipped without
-hypothesis (tier-1 stays dependency-light); CI installs requirements-dev
-so these EXECUTE there, and the scheduled nightly job deepens
-`max_examples` via the `nightly` profile registered in conftest.py. Tests
-here deliberately carry no per-test `max_examples` so the active profile
-controls depth; determinism comes from hypothesis' own seeding plus the
-engine's deterministic scheduler mode.
+forward; the `grasp` aggregation backend must match the `dense` backend
+across kinds × edge densities × tiers; the CacheG/SymG pack→unpack
+transfer forms (including the budget-padded GraSp block form) must
+round-trip losslessly; NodePad's admission rule and the per-bucket
+`grasp_max_nnz` budget must be monotone. Skipped without hypothesis
+(tier-1 stays dependency-light); CI installs requirements-dev so these
+EXECUTE there, and the scheduled nightly job deepens `max_examples` via
+the `nightly` profile registered in conftest.py. Tests here deliberately
+carry no per-test `max_examples` so the active profile controls depth;
+determinism comes from hypothesis' own seeding plus the engine's
+deterministic scheduler mode.
 
 The seeded SymG round-trip sweep formerly in test_gnn_serving.py was
 promoted into `test_symg_roundtrip_lossless` here.
@@ -27,6 +30,9 @@ from repro.core.graph import (BucketLadder, node_bucket, pad_graph,  # noqa: E40
                               required_capacity, symg_pack, symg_unpack)
 from repro.core.models import (GNNConfig, _unpack_adjacency,  # noqa: E402
                                compact_operands, forward_grannite)
+from repro.core.sparsity import (from_block_sparse, grasp_max_nnz,  # noqa: E402
+                                 pad_block_sparse, stack_block_sparse,
+                                 to_block_sparse)
 from repro.data.graphs import planetoid_like  # noqa: E402
 from repro.runtime.gnn_server import (STANDARD_TIERS, GraphServe,  # noqa: E402
                                       GraphServeConfig)
@@ -49,19 +55,20 @@ def _graph(n, seed):
 _ENGINES = {}
 
 
-def _engine(kind):
-    if kind not in _ENGINES:
+def _engine(kind, agg_backend="dense"):
+    key = (kind, agg_backend)
+    if key not in _ENGINES:
         sc = GraphServeConfig(ladder=BucketLadder(buckets=BUCKETS),
                               batch_slots=3, return_logits=True)
         eng = GraphServe(sc, seed=0)
         eng.register_model(kind, GNNConfig(
             kind=kind, in_feats=IN_FEATS, hidden=8, num_classes=CLASSES,
             heads=2, aggregator="max" if kind == "sage" else "mean"),
-            tiers=STANDARD_TIERS)
+            tiers=STANDARD_TIERS, agg_backend=agg_backend)
         eng.warmup()
         eng.calibrate(kind, _graph(64, seed=999))   # quant tiers live
-        _ENGINES[kind] = eng
-    return _ENGINES[kind]
+        _ENGINES[key] = eng
+    return _ENGINES[key]
 
 
 # ------------------------------------------- differential: async == single
@@ -104,7 +111,79 @@ def test_async_batched_logits_equal_sequential(case):
     eng.assert_warm()
 
 
+# ------------------------------------------- differential: grasp == dense
+
+
+@st.composite
+def backend_traffic(draw):
+    kind = draw(st.sampled_from(KINDS))
+    k = draw(st.integers(1, 4))
+    reqs = []
+    for _ in range(k):
+        n = draw(st.integers(10, 200))
+        density = draw(st.floats(0.01, 0.5))
+        edges = max(int(density * n * n), 1)
+        reqs.append((n, edges, draw(st.integers(0, 2 ** 16)),
+                     draw(st.sampled_from((None,) + STANDARD_TIERS))))
+    return kind, reqs
+
+
+@given(backend_traffic())
+def test_grasp_backend_logits_equal_dense(case):
+    """DESIGN.md §10 differential: ANY mix of graph sizes, edge densities
+    (0.01–0.5) and tiers served through the forced-grasp engine's
+    deterministic pipeline equals the dense engine's sequential forward
+    within fp32 tolerance (block-sum accumulation order differs, so this
+    is allclose, not bit-equality), and both engines replay entirely warm.
+    Non-GCN kinds and QuantGr tiers resolve dense on the grasp engine too
+    — the rule, not an error path."""
+    kind, reqs = case
+    eng_g = _engine(kind, "grasp")
+    eng_d = _engine(kind, "dense")
+    graphs = [planetoid_like(num_nodes=n, num_edges=e, num_feats=IN_FEATS,
+                             num_classes=CLASSES, seed=seed,
+                             train_per_class=1)
+              for n, e, seed, _ in reqs]
+    with eng_g.scheduler(PipelineConfig(deterministic=True)) as sched:
+        for g, (_, _, _, tier) in zip(graphs, reqs):
+            sched.submit(g, model=kind, tier=tier)
+        out = sched.drain()
+    eng_g.assert_warm()
+    uids = [eng_d.submit(g, model=kind, tier=tier)
+            for g, (_, _, _, tier) in zip(graphs, reqs)]
+    eng_d.run()
+    eng_d.assert_warm()
+    ref = {r.uid: r for r in eng_d.finished}
+    for r, uid in zip(out, uids):
+        assert ref[uid].backend == "dense"
+        if kind != "gcn" or eng_g.models[kind].tiers[r.tier].quantgr:
+            assert r.backend == "dense"
+        np.testing.assert_allclose(r.logits, ref[uid].logits,
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_array_equal(r.preds, ref[uid].preds)
+
+
 # --------------------------------------------------- pack/unpack round-trips
+
+
+@given(st.integers(1, 3), st.floats(0.0, 0.3), st.integers(0, 2 ** 16))
+def test_block_sparse_pad_stack_roundtrip(cb, density, seed):
+    """Budget-padding and batch-stacking the GraSp block form is lossless:
+    every padded structure densifies back to its source matrix, and the
+    stacked form is the same pytree with a leading batch dim."""
+    rng = np.random.default_rng(seed)
+    n = cb * 128
+    mats = [((rng.random((n, n)) < density) * rng.random((n, n))
+             ).astype(np.float32) for _ in range(2)]
+    budget = max(grasp_max_nnz(n),
+                 *(to_block_sparse(a).max_nnz for a in mats))
+    sps = [pad_block_sparse(to_block_sparse(a), budget) for a in mats]
+    for a, sp in zip(mats, sps):
+        assert sp.max_nnz == budget
+        np.testing.assert_array_equal(from_block_sparse(sp), a)
+    stacked = stack_block_sparse(sps)
+    assert stacked.blocks.shape[0] == 2
+    assert stacked.block_cols.shape == (2, cb, budget)
 
 
 @given(st.integers(2, 60), st.integers(0, 2 ** 16))
@@ -156,3 +235,13 @@ def test_ladder_admission_monotone(a, b):
     lo, hi = min(a, b), max(a, b)
     assert lad.bucket_for(lo) <= lad.bucket_for(hi)
     assert lad.bucket_for(lo) >= required_capacity(lo, lad.slack)
+
+
+@given(st.integers(1, 64), st.integers(0, 64))
+def test_grasp_budget_monotone(cb, dcb):
+    """The per-bucket GraSp block-list budget never shrinks as capacity
+    grows (a graph eligible at one rung stays eligible after a re-bucket)
+    and never exceeds the bucket's column-block count."""
+    lo, hi = cb * 128, (cb + dcb) * 128
+    assert grasp_max_nnz(lo) <= grasp_max_nnz(hi)
+    assert 1 <= grasp_max_nnz(lo) <= cb
