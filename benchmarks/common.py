@@ -39,8 +39,20 @@ def _leaves(x):
     return jax.tree_util.tree_leaves(x)
 
 
-def record(name: str, seconds: float, derived: str = "") -> Dict:
-    row = {"name": name, "us_per_call": seconds * 1e6, "derived": derived}
+def record(name: str, seconds: float, derived: str = "",
+           modelled_s: float = None) -> Dict:
+    """Append one benchmark row (and print it as CSV).
+
+    `modelled_s` — optional modelled accelerator latency for the same
+    callable (benchmarks.tpu_model). When given, the row carries
+    `measured_vs_modelled` = measured CPU seconds / modelled seconds, so
+    BENCH_gnn.json trends show whether measured wall-clock is drifting
+    relative to the analytic roofline (schema in benchmarks/README.md);
+    rows without a model carry None.
+    """
+    ratio = (seconds / modelled_s) if modelled_s else None
+    row = {"name": name, "us_per_call": seconds * 1e6, "derived": derived,
+           "measured_vs_modelled": ratio}
     ROWS.append(row)
     print(f"{name},{row['us_per_call']:.1f},{derived}")
     return row

@@ -32,6 +32,10 @@ def main() -> None:
                     help="also write the serving-throughput and CacheG "
                          "operand-bytes rows to this path (repo-root "
                          "BENCH_gnn.json in CI) for perf-trajectory tracking")
+    ap.add_argument("--only", default=None, choices=["fused_layers"],
+                    help="run a single benchmark family (CI's interpret "
+                         "leg runs `--only fused_layers` so the fused-grid "
+                         "rows land without the full suite)")
     args = ap.parse_args()
 
     from . import gnn_paper, lm_subs
@@ -40,6 +44,10 @@ def main() -> None:
     datasets = (["cora", "citeseer"] if args.dataset == "both"
                 else [args.dataset])
     print("name,us_per_call,derived")
+    if args.only == "fused_layers":
+        gnn_paper.fused_layers(quick=args.quick)
+        _write(args, ROWS)
+        return
     for ds in datasets:
         gnn_paper.fig20_progressive(ds)
         gnn_paper.fig22_path_comparison(ds)
@@ -64,20 +72,26 @@ def main() -> None:
     # --quick rung still exercises the batched bitmap_spmm dispatch
     gnn_paper.grasp_serving(cap=512 if args.quick else 1024,
                             n_queries=2 if args.quick else 4)
+    # fused per-layer kernels vs per-op dispatch (DESIGN.md §11)
+    gnn_paper.fused_layers(quick=args.quick)
     lm_subs.ssd_vs_sequential()
     lm_subs.moe_dispatch_paths()
     lm_subs.serving_bucket_reuse()
+    _write(args, ROWS)
 
+
+def _write(args, rows) -> None:
     with open(args.out, "w") as f:
-        json.dump(ROWS, f, indent=1)
-    print(f"# wrote {len(ROWS)} rows -> {args.out}")
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {len(rows)} rows -> {args.out}")
 
     if args.bench_json:
-        perf = [r for r in ROWS
+        perf = [r for r in rows
                 if r["name"].startswith(("serve/", "operand_pipeline/",
                                          "quality_tiers/",
                                          "pipeline_overlap/",
-                                         "grasp_serving/"))]
+                                         "grasp_serving/",
+                                         "fused_layers/"))]
         with open(args.bench_json, "w") as f:
             json.dump({"rows": perf}, f, indent=1)
         print(f"# wrote {len(perf)} perf rows -> {args.bench_json}")

@@ -100,6 +100,7 @@ def analyze(fn: Callable, *args) -> Dict[str, float]:
     t_gather = gather_bytes / GATHER_BW
     # dense terms overlap (roofline max); the serialized gather path does not
     t_model = max(t_mxu + t_vpu, t_hbm) + t_gather
-    return {"t_model_s": t_model, "t_mxu_s": t_mxu, "t_hbm_s": t_hbm,
-            "t_gather_s": t_gather, "gather_bytes": gather_bytes,
+    return {"t_model_s": t_model, "t_mxu_s": t_mxu, "t_vpu_s": t_vpu,
+            "t_hbm_s": t_hbm, "t_gather_s": t_gather,
+            "gather_bytes": gather_bytes,
             "flops": flops, "bytes": byts, "int8": has_int8_dot}

@@ -300,3 +300,116 @@ def sage_grannite(params: Dict, x: jnp.ndarray, sample_mask: jnp.ndarray,
         raise ValueError(aggregator)
     return (_lin(x, params["w_self"], q.get("self"))
             + _lin(agg, params["w_neigh"], q.get("neigh")) + params["b"])
+
+
+# =========================================================================
+# Fused per-layer dispatch (fusion="layer" plans — DESIGN.md §11)
+# =========================================================================
+#
+# One call per layer into `kernels.ops.fused_*_layer`: aggregate + combine +
+# bias + activation execute as a single kernel pass (EffOp resolves the tier
+# scale selection / backend flag / mask application into the kernel epilogue
+# at trace time). Branch ladders mirror the unfused functions above so a
+# fused plan traces the same operand structure per PlanKey. Two combinations
+# fuse PARTIALLY by design: QuantGr GAT (int8 combine outside, attention +
+# epilogue fused) and QuantGr SAGE (nothing legally foldable — the unfused
+# tier math runs with the activation folded here); see DESIGN.md §11.
+
+
+def _apply_act(z: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "relu":
+        return jax.nn.relu(z)
+    if activation == "elu":
+        return jax.nn.elu(z)
+    if activation == "none":
+        return z
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def gcn_grannite_fused(params: Dict, x: jnp.ndarray, norm_adj: jnp.ndarray,
+                       t: Techniques, *, activation: str = "none",
+                       quant: Optional[QuantizedLinear] = None,
+                       quant_agg=None, agg_h_scale=None, tier_aq=None,
+                       tier_a_scale=None, block_sparse=None) -> jnp.ndarray:
+    """Fused twin of `gcn_grannite` (+ bias + activation in the kernel).
+
+    Same QuantGr aggregation forms, same precedence; the GraSp form takes
+    the block-skip fused kernel, everything else the dense one.
+    """
+    from repro.kernels import ops as kops
+    if t.quantgr and quant is not None:
+        if quant_agg is not None:
+            qa = quant_agg
+        elif agg_h_scale is not None:
+            if tier_aq is not None:
+                from .quant import QuantizedAgg
+                qa = QuantizedAgg(aq=tier_aq, a_scale=tier_a_scale,
+                                  h_scale=agg_h_scale)
+            else:
+                from .quant import quantize_agg_dynamic
+                qa = quantize_agg_dynamic(norm_adj, agg_h_scale)
+        else:
+            # No aggregation scales: nothing past the combine can fuse —
+            # degenerate to the unfused tier math with the act folded here.
+            return _apply_act(gcn_grannite(params, x, norm_adj, t,
+                                           quant=quant), activation)
+        qt = (quant.wq, quant.w_scale, quant.x_scale, qa.h_scale, qa.aq,
+              qa.a_scale)
+        return kops.fused_gcn_layer(x, params["w"], params["b"], quant=qt,
+                                    activation=activation)
+    if t.grasp and block_sparse is not None:
+        return kops.fused_gcn_layer(x, params["w"], params["b"],
+                                    block_sparse=block_sparse,
+                                    activation=activation)
+    return kops.fused_gcn_layer(x, params["w"], params["b"],
+                                norm_adj=norm_adj, activation=activation)
+
+
+def gat_grannite_fused(params: Dict, x: jnp.ndarray, bias_add: jnp.ndarray,
+                       t: Techniques, *, heads: int, out_feats: int,
+                       activation: str = "none",
+                       quant: Optional[QuantizedLinear] = None) -> jnp.ndarray:
+    """Fused twin of `gat_grannite` (concat form): the whole layer for fp32
+    tiers; QuantGr keeps the int8 combine outside and fuses attention +
+    bias + activation (the precombined kernel)."""
+    from repro.kernels import ops as kops
+    n = x.shape[0]
+    b = params["b"].reshape(heads, out_feats)
+    if t.quantgr and quant is not None:
+        h = apply_quantized_linear(x, quant, use_kernel=t.use_pallas)
+        h = h.reshape(n, heads, out_feats)
+        alpha_src = jnp.einsum("nhf,hf->nh", h, params["a_src"])
+        alpha_dst = jnp.einsum("nhf,hf->nh", h, params["a_dst"])
+        out = kops.fused_gat_layer(None, None, params["a_src"],
+                                   params["a_dst"], bias_add, b,
+                                   activation=activation,
+                                   precombined=(h, alpha_dst, alpha_src))
+    else:
+        w3 = params["w"].reshape(x.shape[1], heads, out_feats)
+        out = kops.fused_gat_layer(x, w3, params["a_src"], params["a_dst"],
+                                   bias_add, b, activation=activation)
+    return out.reshape(n, heads * out_feats)
+
+
+def sage_grannite_fused(params: Dict, x: jnp.ndarray,
+                        sample_mask: jnp.ndarray, mean_mask: jnp.ndarray,
+                        t: Techniques, *, aggregator: str,
+                        activation: str = "none",
+                        quant: Optional[Dict] = None) -> jnp.ndarray:
+    """Fused twin of `sage_grannite`: mean (M @ X) or GrAx3 masked-max plus
+    both combines and the epilogue in one pass. QuantGr SAGE cannot fuse
+    (the neighbor combine consumes the aggregation output and all three
+    combines are int8): the unfused tier math runs with the act folded."""
+    from repro.kernels import ops as kops
+    if t.quantgr and quant is not None:
+        return _apply_act(sage_grannite(params, x, sample_mask, mean_mask, t,
+                                        aggregator=aggregator, quant=quant),
+                          activation)
+    if aggregator == "mean":
+        return kops.fused_sage_layer(x, params["w_self"], params["w_neigh"],
+                                     params["b"], mean_mask=mean_mask,
+                                     activation=activation)
+    pooled = jax.nn.relu(x @ params["w_pool"] + params["b_pool"])
+    return kops.fused_sage_layer(x, params["w_self"], params["w_neigh"],
+                                 params["b"], sample_mask=sample_mask,
+                                 pooled=pooled, activation=activation)

@@ -657,36 +657,66 @@ def calibrate_tier(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
     raise ValueError(cfg.kind)
 
 
+# Fusion modes (DESIGN.md §11): how a plan executes each LAYER.
+#   none  — aggregate and combine as separate XLA dots (+ host-side act).
+#   layer — one fused kernel pass per layer (aggregate + combine + bias +
+#           act in a single grid; EffOp epilogue dispatch). A plan
+#           dimension, not a tier: fused and unfused plans compute the same
+#           tier math, only the execution schedule differs.
+FUSION_MODES = ("none", "layer")
+
+
 def forward_grannite(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
                      ops_: GranniteOperands, t: Techniques,
                      quant: Optional[Dict] = None,
-                     tier_ops: Optional[TierOperands] = None) -> jnp.ndarray:
+                     tier_ops: Optional[TierOperands] = None,
+                     fusion: str = "none") -> jnp.ndarray:
     """One dense GraNNite forward. `quant` is the model-level tier
     calibration from `calibrate_tier` (serving tiers); `ops_.quant` is the
     per-graph offline form from `calibrate_quant` (paper tables). When both
     are present the per-graph form wins — it is the more faithful one.
     `tier_ops` carries the per-graph DERIVED tier operands (GCN's cached
     int8 Â); without it a QuantGr GCN forward derives the int8 Â in-trace.
+    `fusion="layer"` executes each layer as one fused kernel pass
+    (`layers.*_grannite_fused`) with the inter-layer activation folded into
+    the kernel epilogue — same math, one grid per layer (DESIGN.md §11).
     """
+    if fusion not in FUSION_MODES:
+        raise ValueError(f"unknown fusion mode {fusion!r}; pick from "
+                         f"{FUSION_MODES}")
+    fused = fusion == "layer"
     tq = (quant or {}) if t.quantgr else {}
     if cfg.kind == "gcn":
         q = ops_.quant or {}
         taq = tier_ops.agg_aq if tier_ops is not None else None
         tas = tier_ops.agg_a_scale if tier_ops is not None else None
-        h = jax.nn.relu(layers.gcn_grannite(
-            params["l1"], x, ops_.norm_adj, t,
-            quant=q.get("l1") or tq.get("l1"),
-            quant_agg=q.get("agg1"), agg_h_scale=tq.get("agg1_h"),
-            tier_aq=taq, tier_a_scale=tas,
-            block_sparse=ops_.block_sparse))
-        return layers.gcn_grannite(params["l2"], h, ops_.norm_adj, t,
-                                   quant=q.get("l2") or tq.get("l2"),
-                                   quant_agg=q.get("agg2"),
-                                   agg_h_scale=tq.get("agg2_h"),
-                                   tier_aq=taq, tier_a_scale=tas,
-                                   block_sparse=ops_.block_sparse)
+        l1_kw = dict(quant=q.get("l1") or tq.get("l1"),
+                     quant_agg=q.get("agg1"), agg_h_scale=tq.get("agg1_h"),
+                     tier_aq=taq, tier_a_scale=tas,
+                     block_sparse=ops_.block_sparse)
+        l2_kw = dict(quant=q.get("l2") or tq.get("l2"),
+                     quant_agg=q.get("agg2"), agg_h_scale=tq.get("agg2_h"),
+                     tier_aq=taq, tier_a_scale=tas,
+                     block_sparse=ops_.block_sparse)
+        if fused:
+            h = layers.gcn_grannite_fused(params["l1"], x, ops_.norm_adj, t,
+                                          activation="relu", **l1_kw)
+            return layers.gcn_grannite_fused(params["l2"], h, ops_.norm_adj,
+                                             t, activation="none", **l2_kw)
+        h = jax.nn.relu(layers.gcn_grannite(params["l1"], x, ops_.norm_adj,
+                                            t, **l1_kw))
+        return layers.gcn_grannite(params["l2"], h, ops_.norm_adj, t, **l2_kw)
     if cfg.kind == "gat":
         per_head = cfg.hidden // cfg.heads
+        if fused:
+            h = layers.gat_grannite_fused(params["l1"], x, ops_.bias_add, t,
+                                          heads=cfg.heads, out_feats=per_head,
+                                          activation="elu", quant=tq.get("l1"))
+            return layers.gat_grannite_fused(params["l2"], h, ops_.bias_add,
+                                             t, heads=1,
+                                             out_feats=cfg.num_classes,
+                                             activation="none",
+                                             quant=tq.get("l2"))
         h = jax.nn.elu(layers.gat_grannite(
             params["l1"], x, ops_.mask_mult, ops_.bias_add, t,
             heads=cfg.heads, out_feats=per_head, quant=tq.get("l1")))
@@ -694,6 +724,15 @@ def forward_grannite(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
                                    t, heads=1, out_feats=cfg.num_classes,
                                    quant=tq.get("l2"))
     if cfg.kind == "sage":
+        if fused:
+            h = layers.sage_grannite_fused(
+                params["l1"], x, ops_.sample_mask, ops_.mean_mask, t,
+                aggregator=cfg.aggregator, activation="relu",
+                quant=tq.get("l1"))
+            return layers.sage_grannite_fused(
+                params["l2"], h, ops_.sample_mask, ops_.mean_mask, t,
+                aggregator=cfg.aggregator, activation="none",
+                quant=tq.get("l2"))
         h = jax.nn.relu(layers.sage_grannite(
             params["l1"], x, ops_.sample_mask, ops_.mean_mask, t,
             aggregator=cfg.aggregator, quant=tq.get("l1")))
@@ -714,8 +753,8 @@ def forward_grannite(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
 #           grasp_max_nnz budget; dense plans must carry None).
 AGG_BACKENDS = ("dense", "grasp")
 
-# (cfg, capacity, batch, techniques, backend)
-PlanKey = Tuple[GNNConfig, int, int, Techniques, str]
+# (cfg, capacity, batch, techniques, backend, fusion)
+PlanKey = Tuple[GNNConfig, int, int, Techniques, str, str]
 
 
 @dataclasses.dataclass
@@ -741,12 +780,16 @@ class ExecutionPlan:
     orthogonal aggregation dimension (DESIGN.md §10): "grasp" plans run the
     block-sparse `bitmap_spmm` aggregation and expect operands carrying a
     budget-padded block structure; "dense" plans expect None there.
+    `fusion` is the orthogonal execution-schedule dimension (DESIGN.md §11):
+    "layer" plans run each layer as ONE fused kernel pass — same tier math,
+    different compiled blob, hence part of the key.
     """
     cfg: GNNConfig
     techniques: Techniques
     capacity: int
     batch_size: int = 0                       # 0 = single-graph plan
     backend: str = "dense"
+    fusion: str = "none"
     fn: Callable = dataclasses.field(default=None, repr=False)
     trace_count: int = 0
     # Captured AT TRACE TIME for grasp plans: True when the kernel routing
@@ -758,7 +801,7 @@ class ExecutionPlan:
     @property
     def key(self) -> PlanKey:
         return (self.cfg, self.capacity, self.batch_size, self.techniques,
-                self.backend)
+                self.backend, self.fusion)
 
     def __call__(self, params: Dict, x: jnp.ndarray, ops_: GranniteOperands,
                  quant: Optional[Dict] = None,
@@ -767,8 +810,10 @@ class ExecutionPlan:
 
 
 def build_plan(cfg: GNNConfig, capacity: int, t: Techniques, *,
-               batch_size: int = 0, backend: str = "dense") -> ExecutionPlan:
-    """Compile-on-first-call plan for (cfg.kind, capacity, t, backend).
+               batch_size: int = 0, backend: str = "dense",
+               fusion: str = "none") -> ExecutionPlan:
+    """Compile-on-first-call plan for (cfg.kind, capacity, t, backend,
+    fusion).
 
     batch_size > 0 builds the batched executor: x is (B, cap, F) and every
     operand field carries a leading B dim (see stack_operands); the
@@ -787,13 +832,20 @@ def build_plan(cfg: GNNConfig, capacity: int, t: Techniques, *,
     block-sparse `bitmap_spmm` path: the tier's Techniques identity is
     unchanged (tiers are serving policy, the backend is a dispatch
     decision), the executed techniques just gain the grasp flag.
+    `fusion="layer"` (DESIGN.md §11) executes each layer as one fused
+    kernel pass — like the backend, a dispatch decision orthogonal to the
+    tier, carried in the key because it changes the compiled blob.
     """
     if backend not in AGG_BACKENDS:
         raise ValueError(f"unknown aggregation backend {backend!r}; pick "
                          f"from {AGG_BACKENDS}")
+    if fusion not in FUSION_MODES:
+        raise ValueError(f"unknown fusion mode {fusion!r}; pick from "
+                         f"{FUSION_MODES}")
     exec_t = dataclasses.replace(t, grasp=True) if backend == "grasp" else t
     plan = ExecutionPlan(cfg=cfg, techniques=t, capacity=capacity,
-                         batch_size=batch_size, backend=backend)
+                         batch_size=batch_size, backend=backend,
+                         fusion=fusion)
 
     def _forward(params, x, ops_, quant, tier_ops):
         plan.trace_count += 1                 # python side effect: traces only
@@ -801,7 +853,7 @@ def build_plan(cfg: GNNConfig, capacity: int, t: Techniques, *,
             from repro.kernels.ops import bitmap_spmm_mode
             plan.grasp_ref_fallback = bitmap_spmm_mode() == "ref"
         return forward_grannite(params, cfg, x, ops_, exec_t, quant=quant,
-                                tier_ops=tier_ops)
+                                tier_ops=tier_ops, fusion=fusion)
 
     if batch_size > 0:
         plan.fn = jax.jit(jax.vmap(_forward, in_axes=(None, 0, 0, None, 0)))

@@ -82,6 +82,105 @@ def sage_max_ref(mask01: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
     return jnp.max(prod, axis=1)
 
 
+# ------------------------------------------------- fused per-layer twins
+#
+# Exact jnp ground truth for `fused_layers.py` — one twin per fused kernel,
+# composed from the per-op refs above plus the EffOp catalogue
+# (`repro.core.effop`), which makes EffOp the semantic spec for the fused
+# epilogues on every backend (the ref path IS what serves on CPU).
+# `repro.core.effop` is imported lazily inside each twin: ref.py loads with
+# the kernels package, before repro.core exists.
+
+
+def _act_ref(z: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "relu":
+        return jax.nn.relu(z)
+    if activation == "elu":
+        return jax.nn.elu(z)
+    if activation == "none":
+        return z
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def fused_gcn_layer_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+                        norm_adj: Optional[jnp.ndarray] = None,
+                        quant=None, activation: str = "none") -> jnp.ndarray:
+    """act(Â @ (X @ W) + b) — dense GCN layer twin.
+
+    quant: optional (wq, w_scale, x_scale, h_scale, aq, a_scale) for the
+    QuantGr tier; then the combine is the int8 chain (quantize X, s8 dot,
+    dequant, re-quantize H) and the aggregate is Âq @ Hq — the exact unfused
+    `apply_quantized_linear` + `apply_quantized_agg` math, inlined so the
+    twin has no dependency on repro.core.
+    """
+    if quant is not None:
+        wq, w_scale, x_scale, h_scale, aq, a_scale = quant
+        xq = jnp.clip(jnp.round(x / x_scale), -127.0, 127.0).astype(jnp.int8)
+        h = int8_matmul_ref(xq, wq, x_scale, w_scale)
+        hq = jnp.clip(jnp.round(h / h_scale), -127.0, 127.0).astype(jnp.int8)
+        acc = jnp.matmul(aq.astype(jnp.int32), hq.astype(jnp.int32),
+                         preferred_element_type=jnp.int32)
+        z = acc.astype(jnp.float32) * (a_scale * h_scale) + b
+        return _act_ref(z, activation)
+    h = matmul_ref(x, w, out_dtype=jnp.float32)
+    return _act_ref(norm_adj @ h + b, activation).astype(x.dtype)
+
+
+def fused_gcn_grasp_layer_ref(blocks: jnp.ndarray, block_cols: jnp.ndarray,
+                              counts: jnp.ndarray, x: jnp.ndarray,
+                              w: jnp.ndarray, b: jnp.ndarray, *,
+                              block_size: int,
+                              activation: str = "none") -> jnp.ndarray:
+    """GraSp GCN layer twin: combine then block-compacted aggregate."""
+    h = matmul_ref(x, w, out_dtype=jnp.float32)
+    agg = bitmap_spmm_block_ref(blocks, block_cols, counts, h,
+                                block_size=block_size)
+    return _act_ref(agg + b, activation).astype(x.dtype)
+
+
+def fused_gat_layer_ref(x: Optional[jnp.ndarray], w: Optional[jnp.ndarray],
+                        a_src: jnp.ndarray, a_dst: jnp.ndarray,
+                        bias_add: jnp.ndarray, b: jnp.ndarray, *,
+                        negative_slope: float = 0.2,
+                        activation: str = "none",
+                        precombined=None) -> jnp.ndarray:
+    """Whole-GAT-layer twin via the EffOp catalogue (GrAx1 + GrAx2).
+
+    x: (N, Fin); w: (Fin, H, F); a_src/a_dst: (H, F); b: (H, F) -> (N, H, F).
+    precombined: optional (h, alpha_dst, alpha_src) — the QuantGr tiers
+    compute the combine outside (int8) and only attention + epilogue fuse.
+    """
+    from repro.core import effop
+    if precombined is not None:
+        h, alpha_dst, alpha_src = precombined
+    else:
+        h = jnp.einsum("nf,fhd->nhd", x, w)
+        alpha_src = jnp.einsum("nhf,hf->nh", h, a_src)
+        alpha_dst = jnp.einsum("nhf,hf->nh", h, a_dst)
+    outs = []
+    for hd in range(h.shape[1]):
+        e = effop.broadcast_add_scores(alpha_src[:, hd], alpha_dst[:, hd],
+                                       grax2=True)
+        e = jax.nn.leaky_relu(e, negative_slope=negative_slope)
+        attn = effop.segment_softmax_dense(e, bias_add)       # GrAx1 mask
+        outs.append(attn @ h[:, hd, :] + b[hd][None, :])
+    return _act_ref(jnp.stack(outs, axis=1), activation)
+
+
+def fused_sage_layer_ref(mask: jnp.ndarray, xk: jnp.ndarray, x: jnp.ndarray,
+                         w_self: jnp.ndarray, w_neigh: jnp.ndarray,
+                         b: jnp.ndarray, *, aggregator: str = "mean",
+                         activation: str = "none") -> jnp.ndarray:
+    """SAGE layer twin: mean (M @ X) or GrAx3 masked-max aggregation plus
+    both combines and the epilogue. xk is X (mean) or pooled >= 0 (max)."""
+    from repro.core import effop
+    if aggregator == "mean":
+        agg = mask @ xk
+    else:
+        agg = effop.masked_max_aggregate(xk, mask, grax3=True)
+    return _act_ref(x @ w_self + agg @ w_neigh + b, activation)
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                         causal: bool = True, window: Optional[int] = None,
                         softcap: Optional[float] = None,

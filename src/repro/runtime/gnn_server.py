@@ -90,10 +90,19 @@ Engine contracts (what tests and operators may rely on):
     once per version). `update()` bumping the version is the only
     invalidation path for all three.
   * Plan identity — plans are keyed by (cfg, bucket, batch, Techniques,
-    backend): tenants sharing a config share blobs, and tier names that
-    alias the same Techniques (GCN int8 vs int8+grax) share too. Tier
+    backend, fusion): tenants sharing a config share blobs, and tier names
+    that alias the same Techniques (GCN int8 vs int8+grax) share too. Tier
     names are a serving-policy concept; the compiler only ever sees
-    Techniques plus the aggregation backend.
+    Techniques plus the aggregation backend and the fusion mode.
+  * Fused layers (DESIGN.md §11) — `fusion="layer"` routes each GNN layer
+    through one fused Pallas kernel (aggregate + combine + bias + act in a
+    single grid, `kernels/fused_layers.py`) with per-request control flow
+    expressed as EffOp masked arithmetic in the kernel epilogue instead of
+    host-side branching. Fusion is a PLAN dimension, not a tier: it never
+    changes numerics beyond kernel-vs-XLA float ordering, so it joins the
+    batch key (a dispatch never mixes fused and unfused plans) and warmup
+    pre-traces BOTH fusion modes per (tier, backend) — mixed fused/unfused
+    traffic replays warm.
 """
 from __future__ import annotations
 
@@ -108,7 +117,7 @@ import numpy as np
 from repro.core.graph import (BucketLadder, Graph, PaddedGraph, pad_graph,
                               stack_padded)
 from repro.core.layers import Techniques
-from repro.core.models import (ExecutionPlan, GNNConfig,
+from repro.core.models import (FUSION_MODES, ExecutionPlan, GNNConfig,
                                GranniteOperands, PlanKey, TierOperands,
                                build_agg_quantizer, build_block_compactor,
                                build_materializer, build_operands, build_plan,
@@ -138,14 +147,15 @@ STANDARD_TIERS = ("fp32", "int8", "int8+grax")
 # density/cost rule, "grasp" forces the sparse path where eligible.
 AGG_BACKEND_MODES = ("dense", "auto", "grasp")
 
-BatchKey = Tuple[str, int, str, str]     # (model, bucket, tier, agg backend)
+# (model, bucket, tier, agg backend, fusion mode)
+BatchKey = Tuple[str, int, str, str, str]
 
 
 def best_fill_key(stats: Dict[BatchKey, Tuple[int, int]], batch_slots: int,
                   last_dispatch: Optional[Dict[str, int]] = None) -> BatchKey:
     """Pick the batch key to dispatch next (DESIGN.md §9).
 
-    `stats` maps each pending (model, bucket, tier, backend) key to
+    `stats` maps each pending (model, bucket, tier, backend, fusion) key to
     `(count, head_order)` — how many requests wait under it and the arrival
     order of its oldest one. Selection order:
 
@@ -172,7 +182,7 @@ def pending_stats(reqs: Sequence["GNNRequest"]
     """Fold a pending-request sequence into `best_fill_key` stats."""
     stats: Dict[BatchKey, Tuple[int, int]] = {}
     for i, r in enumerate(reqs):
-        k = (r.model, r.bucket, r.tier, r.backend)
+        k = (r.model, r.bucket, r.tier, r.backend, r.fusion)
         c = stats.get(k)
         stats[k] = (1, i) if c is None else (c[0] + 1, c[1])
     return stats
@@ -231,6 +241,7 @@ class GNNRequest:
     submitted_s: float
     tier: str = "fp32"                     # resolved tier (post-fallback)
     backend: str = "dense"                 # resolved agg backend (§10)
+    fusion: str = "none"                   # resolved fusion mode (§11)
     tier_ops: Optional[TierOperands] = None  # derived (e.g. GCN int8 Â)
     finished_s: float = 0.0
     done: bool = False
@@ -254,6 +265,7 @@ class _ModelEntry:
     tiers: Dict[str, Techniques]           # tier name -> execution variant
     default_tier: str
     agg_backend: str = "dense"             # "dense" | "auto" | "grasp" (§10)
+    default_fusion: str = "none"           # "none" | "layer" (§11)
     # once per (model, tier): calibrate_tier pytrees for QuantGr tiers, and
     # the measured accuracy_delta_vs_fp32 for every non-fp32 tier
     calibrations: Dict[str, Dict] = dataclasses.field(default_factory=dict)
@@ -317,7 +329,8 @@ class GraphServe:
     def register_model(self, name: str, cfg: GNNConfig, params: Optional[Dict] = None,
                        *, techniques: Optional[Techniques] = None,
                        tiers=None, default_tier: str = "fp32",
-                       agg_backend: str = "dense") -> None:
+                       agg_backend: str = "dense",
+                       fusion: str = "none") -> None:
         """Register a model with its quality-tier registry.
 
         `tiers` may be: None (single-tier registry {"fp32": techniques or
@@ -334,6 +347,13 @@ class GraphServe:
         today — other kinds (and QuantGr tiers, whose aggregation is the
         cached int8 Â) always resolve dense, so a non-"dense" mode on them
         is a no-op, not an error.
+
+        `fusion` picks the model's DEFAULT fused-layer mode (DESIGN.md
+        §11): "none" (per-op dispatch) or "layer" (one fused Pallas kernel
+        per GNN layer). Requests may override it per call
+        (`query(gid, fusion=...)`); warmup pre-traces both modes either
+        way, so the default is a routing preference, not a compile
+        commitment.
         """
         import jax
         if params is None:
@@ -373,24 +393,30 @@ class GraphServe:
         if agg_backend not in AGG_BACKEND_MODES:
             raise ValueError(f"unknown agg_backend mode {agg_backend!r}; "
                              f"pick from {AGG_BACKEND_MODES}")
+        if fusion not in FUSION_MODES:
+            raise ValueError(f"unknown fusion mode {fusion!r}; "
+                             f"pick from {FUSION_MODES}")
         self.models[name] = _ModelEntry(cfg=cfg, params=params,
                                         tiers=registry,
                                         default_tier=default_tier,
-                                        agg_backend=agg_backend)
+                                        agg_backend=agg_backend,
+                                        default_fusion=fusion)
 
     def plan_for(self, model: str, bucket: int, tier: Optional[str] = None,
-                 backend: str = "dense") -> ExecutionPlan:
+                 backend: str = "dense",
+                 fusion: str = "none") -> ExecutionPlan:
         # keyed by the plan's full identity, not the (model, tier) names:
         # params and calibrations are runtime args, so models/tiers with
-        # identical (cfg, techniques, backend) share one compiled blob per
-        # bucket
+        # identical (cfg, techniques, backend, fusion) share one compiled
+        # blob per bucket
         e = self.models[model]
         t = e.tiers[tier if tier is not None else e.default_tier]
-        key: PlanKey = (e.cfg, bucket, self.sc.batch_slots, t, backend)
+        key: PlanKey = (e.cfg, bucket, self.sc.batch_slots, t, backend,
+                        fusion)
         if key not in self._plans:
             self._plans[key] = build_plan(e.cfg, bucket, t,
                                           batch_size=self.sc.batch_slots,
-                                          backend=backend)
+                                          backend=backend, fusion=fusion)
         return self._plans[key]
 
     @property
@@ -406,9 +432,12 @@ class GraphServe:
                 + self._block_compactor.trace_count)
 
     def warmup(self, *, buckets: Optional[Tuple[int, ...]] = None) -> int:
-        """Compile every (model, bucket, tier, backend) plan — and, with
-        CacheG enabled, every (bucket, fieldset) materializer — once with
-        placeholder inputs.
+        """Compile every (model, bucket, tier, backend, fusion) plan — and,
+        with CacheG enabled, every (bucket, fieldset) materializer — once
+        with placeholder inputs. BOTH fusion modes warm per (tier,
+        backend): fusion is a per-request plan dimension (DESIGN.md §11),
+        so mixed fused/unfused traffic must replay warm exactly like mixed
+        tiers and backends do.
 
         QuantGr tiers not yet calibrated warm against a THROWAWAY
         calibration built from the placeholder graph: `calibrate_tier`'s
@@ -458,31 +487,36 @@ class GraphServe:
                     backends = ("dense",) if (ops_grasp is None or t.quantgr
                                               ) else ("dense", "grasp")
                     for backend in backends:
-                        # alias tiers (e.g. GCN int8+grax == int8) share a
-                        # plan AND a calibration structure — exercising
-                        # them again would just recompute placeholders for
-                        # zero new traces
-                        plan = self.plan_for(name, bucket, tier, backend)
-                        if (name, plan.key) in warmed:
-                            continue
-                        warmed.add((name, plan.key))
-                        quant = e.calibrations.get(tier)
-                        if quant is None and t.quantgr:
-                            if (name, tier) not in warm_cal:
-                                x1 = jnp.zeros((bucket, e.cfg.in_feats),
-                                               jnp.float32)
-                                warm_cal[(name, tier)] = calibrate_tier(
-                                    e.params, e.cfg, x1, single)
-                            quant = warm_cal[(name, tier)]
-                        tops = None
-                        if self._needs_tier_ops(e, tier):
-                            # also warms the per-bucket tier-operand deriver
-                            tops = stack_tier_operands(
-                                [self._agg_quantizer(single.norm_adj)] * b)
-                        out = plan(e.params, x,
-                                   ops_grasp if backend == "grasp" else ops,
-                                   quant, tops)
-                        out.block_until_ready()
+                        for fusion in FUSION_MODES:
+                            # alias tiers (e.g. GCN int8+grax == int8)
+                            # share a plan AND a calibration structure —
+                            # exercising them again would just recompute
+                            # placeholders for zero new traces
+                            plan = self.plan_for(name, bucket, tier,
+                                                 backend, fusion)
+                            if (name, plan.key) in warmed:
+                                continue
+                            warmed.add((name, plan.key))
+                            quant = e.calibrations.get(tier)
+                            if quant is None and t.quantgr:
+                                if (name, tier) not in warm_cal:
+                                    x1 = jnp.zeros((bucket, e.cfg.in_feats),
+                                                   jnp.float32)
+                                    warm_cal[(name, tier)] = calibrate_tier(
+                                        e.params, e.cfg, x1, single)
+                                quant = warm_cal[(name, tier)]
+                            tops = None
+                            if self._needs_tier_ops(e, tier):
+                                # also warms the per-bucket tier-operand
+                                # deriver
+                                tops = stack_tier_operands(
+                                    [self._agg_quantizer(single.norm_adj)]
+                                    * b)
+                            out = plan(e.params, x,
+                                       ops_grasp if backend == "grasp"
+                                       else ops,
+                                       quant, tops)
+                            out.block_until_ready()
         self._warm_blobs = self.compiled_blobs
         return self._warm_blobs
 
@@ -560,6 +594,17 @@ class GraphServe:
             self._count("tier_fallbacks")
             return "fp32"
         return tier
+
+    def _resolve_fusion(self, model: str, fusion: Optional[str]) -> str:
+        """Requested fusion mode -> served mode: model default when
+        unspecified; an unknown name is a caller error (unlike tier
+        fallback, there is no quality ladder to degrade along)."""
+        fusion = (fusion if fusion is not None
+                  else self.models[model].default_fusion)
+        if fusion not in FUSION_MODES:
+            raise ValueError(f"unknown fusion mode {fusion!r}; "
+                             f"pick from {FUSION_MODES}")
+        return fusion
 
     @staticmethod
     def _needs_tier_ops(e: _ModelEntry, tier: str) -> bool:
@@ -681,10 +726,11 @@ class GraphServe:
                  tier_ops: Optional[TierOperands] = None,
                  tier_resolved: bool = False,
                  backend: Optional[str] = None,
+                 fusion: Optional[str] = None,
                  submitted_s: Optional[float] = None) -> GNNRequest:
-        """Host-stage tail shared by every intake path: resolve the tier
-        and agg backend, realize operands if the caller didn't, assign the
-        uid. Returns the ready-to-dispatch request WITHOUT touching the
+        """Host-stage tail shared by every intake path: resolve the tier,
+        agg backend, and fusion mode, realize operands if the caller
+        didn't, assign the uid. Returns the ready-to-dispatch request WITHOUT touching the
         engine queue — the sync path pushes it (`_push`), the pipeline
         scheduler hands it to its own ready stage. `submitted_s` lets the
         scheduler pin latency accounting to intake time (queue wait
@@ -693,6 +739,7 @@ class GraphServe:
         submitted_s = submitted_s if submitted_s is not None else now
         if not tier_resolved:
             tier = self._resolve_tier(model, tier)
+        fusion = self._resolve_fusion(model, fusion)
         if backend is None:
             backend, ops = self._resolve_and_build(model, tier, pg)
         elif ops is None:
@@ -711,7 +758,8 @@ class GraphServe:
                 self.metrics["first_submit_s"] = submitted_s
         return GNNRequest(uid=uid, model=model, pg=pg, ops=ops,
                           bucket=pg.capacity, submitted_s=submitted_s,
-                          tier=tier, backend=backend, tier_ops=tier_ops)
+                          tier=tier, backend=backend, fusion=fusion,
+                          tier_ops=tier_ops)
 
     def _push(self, req: GNNRequest) -> int:
         self.queue.append(req)
@@ -719,16 +767,19 @@ class GraphServe:
 
     def prepare_submit(self, g: Graph, *, model: str,
                        tier: Optional[str] = None,
+                       fusion: Optional[str] = None,
                        submitted_s: Optional[float] = None) -> GNNRequest:
         """HOST stage of a one-shot request: NodePad padding + operand
         build/packing. Scheduler-callable from any worker thread."""
         return self._prepare(model, self.sc.ladder.pad(g), tier=tier,
-                             submitted_s=submitted_s)
+                             fusion=fusion, submitted_s=submitted_s)
 
     def submit(self, g: Graph, *, model: str,
-               tier: Optional[str] = None) -> int:
+               tier: Optional[str] = None,
+               fusion: Optional[str] = None) -> int:
         """One-shot inference request over a static graph."""
-        return self._push(self.prepare_submit(g, model=model, tier=tier))
+        return self._push(self.prepare_submit(g, model=model, tier=tier,
+                                              fusion=fusion))
 
     def attach(self, g: Graph, *, model: str, calibrate: bool = True) -> int:
         """Register an evolving graph; returns a graph_id for update/query.
@@ -787,9 +838,11 @@ class GraphServe:
         return rebucketed
 
     def prepare_query(self, graph_id: int, *, tier: Optional[str] = None,
+                      fusion: Optional[str] = None,
                       submitted_s: Optional[float] = None) -> GNNRequest:
         """HOST stage of a query over an attached graph's current snapshot,
-        optionally pinning a quality tier (model default otherwise).
+        optionally pinning a quality tier and/or fusion mode (model
+        defaults otherwise).
 
         CacheG hit path: an unchanged structure serves straight from the
         device-resident cache — zero host-side operand construction, zero
@@ -818,7 +871,7 @@ class GraphServe:
             model, pg = self.graphs[graph_id]
             ver = self._graph_version[graph_id]
         if not self.sc.use_cacheg:
-            return self._prepare(model, pg, tier=tier,
+            return self._prepare(model, pg, tier=tier, fusion=fusion,
                                  submitted_s=submitted_s)
         key = (graph_id, ver)
         with self._lock:
@@ -861,11 +914,13 @@ class GraphServe:
                 ops = dataclasses.replace(ops, block_sparse=bsp)
         return self._prepare(model, pg, ops, tier=resolved, tier_ops=tops,
                              tier_resolved=True, backend=backend,
-                             submitted_s=submitted_s)
+                             fusion=fusion, submitted_s=submitted_s)
 
-    def query(self, graph_id: int, *, tier: Optional[str] = None) -> int:
+    def query(self, graph_id: int, *, tier: Optional[str] = None,
+              fusion: Optional[str] = None) -> int:
         """Enqueue inference over an attached graph (see `prepare_query`)."""
-        return self._push(self.prepare_query(graph_id, tier=tier))
+        return self._push(self.prepare_query(graph_id, tier=tier,
+                                             fusion=fusion))
 
     # --------------------------------------------------------------- execution
     def run(self) -> List[GNNRequest]:
@@ -876,13 +931,14 @@ class GraphServe:
     def _run_batch(self) -> None:
         # best-filling key first (not queue[0]'s — see best_fill_key): a
         # lone odd request at the head no longer forces a 1-of-N dispatch
-        # while fully-fillable keys wait behind it. Tier AND agg backend
-        # are part of the batch key: both select different compiled plans,
-        # so a slot can never mix execution variants.
+        # while fully-fillable keys wait behind it. Tier, agg backend AND
+        # fusion mode are part of the batch key: all three select
+        # different compiled plans, so a slot can never mix execution
+        # variants.
         key = best_fill_key(pending_stats(self.queue), self.sc.batch_slots,
                             self._last_dispatch)
         batch = [r for r in self.queue
-                 if (r.model, r.bucket, r.tier, r.backend) == key
+                 if (r.model, r.bucket, r.tier, r.backend, r.fusion) == key
                  ][: self.sc.batch_slots]
         taken = {r.uid for r in batch}
         self.queue = [r for r in self.queue if r.uid not in taken]
@@ -892,7 +948,7 @@ class GraphServe:
         """DEVICE stage: one fixed-width dispatch of same-key requests.
 
         Called with 1..batch_slots requests sharing one (model, bucket,
-        tier, backend) key, from exactly ONE thread at a time (the sync
+        tier, backend, fusion) key, from exactly ONE thread at a time (the sync
         `run()` loop, or the pipeline scheduler's dispatcher). Junk slots
         repeat a real request so batch width never changes shape; their
         outputs are dropped. `device_busy_s` accumulates the wall-clock of
@@ -917,7 +973,7 @@ class GraphServe:
         tops = (stack_tier_operands([r.tier_ops for r in slots])
                 if slots[0].tier_ops is not None else None)
         plan = self.plan_for(head.model, head.bucket, head.tier,
-                             head.backend)
+                             head.backend, head.fusion)
         logits = plan(e.params, x, ops, e.calibrations.get(head.tier), tops)
         logits.block_until_ready()
         # trace-time capture, not a dispatch-time env read: the compiled

@@ -10,8 +10,8 @@ exists to hide. The scheduler overlaps them as a two-stage pipeline:
   bounded    worker threads running         bounded   one dispatcher thread
   queue      engine.prepare_submit /        buffer    grouping ready requests
              prepare_query (ladder.pad,     (per      by (model, bucket,
-             operand build, CompactOperands batch     tier, agg backend) and
-             packing, CacheG lookups)       key)      driving
+             operand build, CompactOperands batch     tier, agg backend,
+             packing, CacheG lookups)       key)      fusion) and driving
                                                       engine._execute_batch
 
 Policies (all per `PipelineConfig`):
@@ -90,6 +90,7 @@ class _Work:
     graph: Optional[Graph] = None
     graph_id: Optional[int] = None
     tier: Optional[str] = None
+    fusion: Optional[str] = None
 
 
 # One ready-buffer entry: (arrival serial, arrival time, request). The
@@ -143,17 +144,21 @@ class PipelineScheduler:
 
     # ------------------------------------------------------------- intake
     def submit(self, g: Graph, *, model: str,
-               tier: Optional[str] = None) -> int:
+               tier: Optional[str] = None,
+               fusion: Optional[str] = None) -> int:
         """Enqueue a one-shot request; returns a ticket (see `drain`)."""
         return self._accept(_Work(ticket=-1, kind="submit",
                                   submitted_s=time.perf_counter(),
-                                  model=model, graph=g, tier=tier))
+                                  model=model, graph=g, tier=tier,
+                                  fusion=fusion))
 
-    def query(self, graph_id: int, *, tier: Optional[str] = None) -> int:
+    def query(self, graph_id: int, *, tier: Optional[str] = None,
+              fusion: Optional[str] = None) -> int:
         """Enqueue a query over an attached graph; returns a ticket."""
         return self._accept(_Work(ticket=-1, kind="query",
                                   submitted_s=time.perf_counter(),
-                                  graph_id=graph_id, tier=tier))
+                                  graph_id=graph_id, tier=tier,
+                                  fusion=fusion))
 
     def _accept(self, w: _Work) -> int:
         with self._cond:
@@ -187,9 +192,10 @@ class PipelineScheduler:
     def _prepare(self, w: _Work) -> GNNRequest:
         if w.kind == "submit":
             return self.engine.prepare_submit(w.graph, model=w.model,
-                                              tier=w.tier,
+                                              tier=w.tier, fusion=w.fusion,
                                               submitted_s=w.submitted_s)
         return self.engine.prepare_query(w.graph_id, tier=w.tier,
+                                         fusion=w.fusion,
                                          submitted_s=w.submitted_s)
 
     def _host_loop(self) -> None:
@@ -224,7 +230,7 @@ class PipelineScheduler:
                 self._cond.notify_all()
 
     def _push_ready_locked(self, ticket: int, req: GNNRequest) -> None:
-        key = (req.model, req.bucket, req.tier, req.backend)
+        key = (req.model, req.bucket, req.tier, req.backend, req.fusion)
         self._ready.setdefault(key, deque()).append(
             (self._arrival_serial, time.perf_counter(), req))
         self._arrival_serial += 1

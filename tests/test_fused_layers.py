@@ -1,0 +1,360 @@
+"""Fused per-layer kernel suite (DESIGN.md §11).
+
+Four layers of coverage:
+
+* kernel-mode routing: the explicit REPRO_KERNEL_MODE override beats
+  backend autodetect and REPRO_PALLAS_INTERPRET (kernels/ops.py docstring
+  precedence), and an unknown value is a loud error;
+* interpret-grid differentials: every fused kernel variant vs its exact
+  jnp ref twin, including tile-remainder shapes (N and F not multiples of
+  128 — the wrappers pad, the kernels mask, the strips strip);
+* the plan-dimension contract: `forward_grannite(..., fusion="layer")`
+  equals `fusion="none"` across kinds x tiers x agg backends (same tier
+  math, different execution schedule);
+* serving: mixed fused/unfused traffic through GraphServe under the
+  deterministic async scheduler replays warm (zero recompiles) and every
+  fused request's logits match the unfused forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import BucketLadder, Graph, pad_graph
+from repro.core.models import (FUSION_MODES, GNNConfig, build_operands,
+                               build_plan, calibrate_tier,
+                               derive_tier_operands, forward_grannite,
+                               init_params)
+from repro.core.sparsity import to_block_sparse
+from repro.kernels import ops as kops
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------- mode routing
+
+
+class TestKernelModeRouting:
+    def test_explicit_override_beats_autodetect(self, monkeypatch):
+        # even with the interpret CI flag set, the explicit mode wins
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        for mode in ("pallas", "interpret", "ref"):
+            monkeypatch.setenv("REPRO_KERNEL_MODE", mode)
+            assert kops._mode() == mode
+
+    def test_unknown_override_raises(self, monkeypatch):
+        monkeypatch.setenv("REPRO_KERNEL_MODE", "magic")
+        with pytest.raises(ValueError, match="REPRO_KERNEL_MODE"):
+            kops._mode()
+
+    def test_autodetect_fallback_order(self, monkeypatch):
+        monkeypatch.delenv("REPRO_KERNEL_MODE", raising=False)
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        if jax.default_backend() != "tpu":
+            assert kops._mode() == "interpret"
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+        expect = "pallas" if jax.default_backend() == "tpu" else "ref"
+        assert kops._mode() == expect
+
+
+# ------------------------------------------- kernel vs ref twins
+
+
+def _norm_adj(rng, n, density=0.1):
+    adj = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(adj, 1.0)
+    return jnp.asarray(adj / np.maximum(adj.sum(1, keepdims=True), 1.0))
+
+
+def _both_modes(monkeypatch, fn):
+    """Run fn() under forced ref then forced interpret kernel routing."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "ref")
+    want = fn()
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    got = fn()
+    monkeypatch.delenv("REPRO_KERNEL_MODE", raising=False)
+    return np.asarray(want), np.asarray(got)
+
+
+SHAPES = [(64, 32, 48), (130, 70, 90)]     # second: tile remainders
+
+
+@pytest.mark.parametrize("n,fin,o", SHAPES)
+@pytest.mark.parametrize("act", ["none", "relu", "elu"])
+def test_fused_gcn_dense_kernel(monkeypatch, n, fin, o, act):
+    rng = _rng(1)
+    na = _norm_adj(rng, n)
+    x = jnp.asarray(rng.standard_normal((n, fin)).astype(np.float32))
+    w = jnp.asarray(0.2 * rng.standard_normal((fin, o)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((o,)).astype(np.float32))
+    want, got = _both_modes(monkeypatch, lambda: kops.fused_gcn_layer(
+        x, w, b, norm_adj=na, activation=act))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,fin,o", SHAPES)
+def test_fused_gcn_int8_kernel(monkeypatch, n, fin, o):
+    rng = _rng(2)
+    x = jnp.asarray(rng.standard_normal((n, fin)).astype(np.float32))
+    quant = (jnp.asarray(rng.integers(-127, 128, (fin, o)).astype(np.int8)),
+             jnp.asarray((0.01 + 0.02 * rng.random(o)).astype(np.float32)),
+             jnp.float32(0.05), jnp.float32(0.1),
+             jnp.asarray(rng.integers(-127, 128, (n, n)).astype(np.int8)),
+             jnp.asarray((0.005 + 0.01 * rng.random((n, 1))
+                          ).astype(np.float32)))
+    b = jnp.asarray(rng.standard_normal((o,)).astype(np.float32))
+    want, got = _both_modes(monkeypatch, lambda: kops.fused_gcn_layer(
+        x, None, b, quant=quant, activation="relu"))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_gcn_grasp_kernel(monkeypatch):
+    n, fin, o = 256, 70, 90
+    rng = _rng(3)
+    adj = np.zeros((n, n), np.float32)
+    idx = np.arange(n)
+    for d in (0, 1, 2):                      # banded: some blocks all-zero
+        adj[idx, (idx + d) % n] = 1.0
+        adj[(idx + d) % n, idx] = 1.0
+    na = jnp.asarray(adj / adj.sum(1, keepdims=True))
+    bsp = to_block_sparse(np.asarray(na))
+    x = jnp.asarray(rng.standard_normal((n, fin)).astype(np.float32))
+    w = jnp.asarray(0.2 * rng.standard_normal((fin, o)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((o,)).astype(np.float32))
+    want, got = _both_modes(monkeypatch, lambda: kops.fused_gcn_layer(
+        x, w, b, block_sparse=bsp, activation="relu"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # the block-skip form must also equal the dense fused layer
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "ref")
+    dense = kops.fused_gcn_layer(x, w, b, norm_adj=na, activation="relu")
+    np.testing.assert_allclose(got, np.asarray(dense), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,fin,heads,f", [(64, 32, 2, 16), (130, 45, 3, 20)])
+def test_fused_gat_full_kernel(monkeypatch, n, fin, heads, f):
+    rng = _rng(4)
+    adj = (rng.random((n, n)) < 0.15)
+    np.fill_diagonal(adj, True)
+    bias = jnp.asarray(np.where(adj, 0.0, -1e9).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((n, fin)).astype(np.float32))
+    w = jnp.asarray(0.2 * rng.standard_normal((fin, heads, f)
+                                              ).astype(np.float32))
+    a_src = jnp.asarray(0.3 * rng.standard_normal((heads, f)
+                                                  ).astype(np.float32))
+    a_dst = jnp.asarray(0.3 * rng.standard_normal((heads, f)
+                                                  ).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((heads, f)).astype(np.float32))
+    want, got = _both_modes(monkeypatch, lambda: kops.fused_gat_layer(
+        x, w, a_src, a_dst, bias, b, activation="elu"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_gat_precombined_kernel(monkeypatch):
+    n, heads, f = 130, 3, 20
+    rng = _rng(5)
+    adj = (rng.random((n, n)) < 0.15)
+    np.fill_diagonal(adj, True)
+    bias = jnp.asarray(np.where(adj, 0.0, -1e9).astype(np.float32))
+    h = jnp.asarray(rng.standard_normal((n, heads, f)).astype(np.float32))
+    a_src = jnp.asarray(0.3 * rng.standard_normal((heads, f)
+                                                  ).astype(np.float32))
+    a_dst = jnp.asarray(0.3 * rng.standard_normal((heads, f)
+                                                  ).astype(np.float32))
+    alpha_src = jnp.einsum("nhf,hf->nh", h, a_src)
+    alpha_dst = jnp.einsum("nhf,hf->nh", h, a_dst)
+    b = jnp.asarray(rng.standard_normal((heads, f)).astype(np.float32))
+    want, got = _both_modes(monkeypatch, lambda: kops.fused_gat_layer(
+        None, None, a_src, a_dst, bias, b, activation="none",
+        precombined=(h, alpha_dst, alpha_src)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("aggregator", ["mean", "max"])
+@pytest.mark.parametrize("n,fin,o", SHAPES)
+def test_fused_sage_kernel(monkeypatch, aggregator, n, fin, o):
+    rng = _rng(6)
+    mask = (rng.random((n, n)) < 0.2).astype(np.float32)
+    np.fill_diagonal(mask, 1.0)
+    x = jnp.asarray(rng.standard_normal((n, fin)).astype(np.float32))
+    ws = jnp.asarray(0.2 * rng.standard_normal((fin, o)).astype(np.float32))
+    wn = jnp.asarray(0.2 * rng.standard_normal((fin, o)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((o,)).astype(np.float32))
+    if aggregator == "mean":
+        mm = jnp.asarray(mask / np.maximum(mask.sum(1, keepdims=True), 1.0))
+        fn = lambda: kops.fused_sage_layer(
+            x, ws, wn, b, mean_mask=mm, activation="relu")
+    else:
+        pooled = jnp.asarray(np.abs(rng.standard_normal((n, fin))
+                                    ).astype(np.float32))
+        fn = lambda: kops.fused_sage_layer(
+            x, ws, wn, b, sample_mask=jnp.asarray(mask), pooled=pooled,
+            activation="relu")
+    want, got = _both_modes(monkeypatch, fn)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------- fusion as a plan dimension
+
+
+def _setup(kind, *, n=100, cap=128, fin=12, hidden=16, classes=5, heads=2,
+           grasp=False, seed=7):
+    rng = _rng(seed)
+    if grasp:
+        src = np.repeat(np.arange(n, dtype=np.int32), 3)
+        dst = (src + np.tile(np.arange(1, 4, dtype=np.int32), n)) % n
+        ei = np.concatenate([np.stack([src, dst]),
+                             np.stack([dst, src])], axis=1)
+    else:
+        m = n * 4
+        ei = rng.integers(0, n, size=(2, m)).astype(np.int32)
+        ei = np.concatenate([ei, ei[::-1]], axis=1)
+    feats = rng.standard_normal((n, fin)).astype(np.float32)
+    pg = pad_graph(Graph(edge_index=ei, num_nodes=n, features=feats),
+                   capacity=cap)
+    cfg = GNNConfig(kind=kind, in_feats=fin, hidden=hidden,
+                    num_classes=classes, heads=heads,
+                    aggregator="max" if kind == "sage" else "mean")
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    ops_ = build_operands(pg, cfg, grasp=grasp)
+    return pg, cfg, params, ops_
+
+
+@pytest.mark.parametrize("kind", ["gcn", "gat", "sage"])
+@pytest.mark.parametrize("tier", ["fp32", "int8", "int8+grax"])
+def test_forward_fused_matches_unfused(kind, tier):
+    from repro.runtime.gnn_server import tier_techniques
+    t = tier_techniques(kind)[tier]
+    pg, cfg, params, ops_ = _setup(kind)
+    x = jnp.asarray(pg.features)
+    quant = calibrate_tier(params, cfg, x, ops_) if t.quantgr else None
+    tops = (derive_tier_operands(ops_.norm_adj)
+            if kind == "gcn" and t.quantgr else None)
+    want = forward_grannite(params, cfg, x, ops_, t, quant=quant,
+                            tier_ops=tops, fusion="none")
+    got = forward_grannite(params, cfg, x, ops_, t, quant=quant,
+                           tier_ops=tops, fusion="layer")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_forward_fused_matches_unfused_grasp():
+    from repro.runtime.gnn_server import tier_techniques
+    t = dataclasses.replace(tier_techniques("gcn")["fp32"], grasp=True)
+    pg, cfg, params, ops_ = _setup("gcn", n=120, cap=256, grasp=True)
+    x = jnp.asarray(pg.features)
+    want = forward_grannite(params, cfg, x, ops_, t, fusion="none")
+    got = forward_grannite(params, cfg, x, ops_, t, fusion="layer")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_unknown_fusion_mode_rejected():
+    from repro.core.layers import Techniques
+    pg, cfg, params, ops_ = _setup("gcn")
+    x = jnp.asarray(pg.features)
+    t = Techniques(stagr=True, graphsplit=True)
+    with pytest.raises(ValueError, match="fusion"):
+        forward_grannite(params, cfg, x, ops_, t, fusion="bogus")
+    with pytest.raises(ValueError, match="fusion"):
+        build_plan(cfg, pg.capacity, t, fusion="bogus")
+
+
+def test_plan_key_carries_fusion():
+    pg, cfg, params, ops_ = _setup("gcn")
+    from repro.core.layers import Techniques
+    t = Techniques(stagr=True, graphsplit=True)
+    p_none = build_plan(cfg, pg.capacity, t, fusion="none")
+    p_layer = build_plan(cfg, pg.capacity, t, fusion="layer")
+    assert p_none.key != p_layer.key
+    assert p_none.key[:-1] == p_layer.key[:-1]
+    assert set(FUSION_MODES) == {p_none.key[-1], p_layer.key[-1]}
+
+
+# --------------------------------------------------- serving level
+
+
+def _traffic_graph(n, seed, fin=12, classes=4):
+    rng = _rng(seed)
+    m = max(1, n * 3)
+    ei = rng.integers(0, n, size=(2, m)).astype(np.int32)
+    ei = np.concatenate([ei, ei[::-1]], axis=1)
+    feats = rng.standard_normal((n, fin)).astype(np.float32)
+    labels = rng.integers(0, classes, size=(n,)).astype(np.int32)
+    return Graph(edge_index=ei, num_nodes=n, features=feats, labels=labels)
+
+
+def test_serving_mixed_fusion_zero_recompile_async():
+    """Mixed fused/unfused/mixed-tier traffic through the deterministic
+    async scheduler: zero recompiles after warmup, fused logits equal the
+    unfused forward, and fused/unfused requests never share a batch."""
+    from repro.runtime.gnn_server import (GraphServe, GraphServeConfig,
+                                          STANDARD_TIERS)
+    from repro.runtime.scheduler import PipelineConfig
+
+    eng = GraphServe(GraphServeConfig(ladder=BucketLadder(buckets=(128,)),
+                                      batch_slots=3, return_logits=True),
+                     seed=0)
+    eng.register_model("gcn", GNNConfig(kind="gcn", in_feats=12, hidden=8,
+                                        num_classes=4),
+                       tiers=STANDARD_TIERS, agg_backend="auto")
+    eng.warmup()
+    eng.calibrate("gcn", _traffic_graph(64, seed=999))
+
+    traffic = [(40, "fp32", "layer"), (60, "fp32", "none"),
+               (80, "int8", "layer"), (50, "fp32", "layer"),
+               (70, "int8", "none"), (90, None, None),
+               (30, "int8+grax", "layer")]
+    with eng.scheduler(PipelineConfig(deterministic=True)) as sched:
+        for i, (n, tier, fusion) in enumerate(traffic):
+            sched.submit(_traffic_graph(n, seed=i), model="gcn", tier=tier,
+                         fusion=fusion)
+        done = sched.drain()
+    eng.assert_warm()                       # THE zero-recompile contract
+
+    assert len(done) == len(traffic)
+    assert {r.fusion for r in done} == {"none", "layer"}
+    e = eng.models["gcn"]
+    for r in done:
+        want = forward_grannite(e.params, e.cfg,
+                                jnp.asarray(r.pg.features), r.ops,
+                                e.tiers[r.tier],
+                                quant=e.calibrations.get(r.tier),
+                                tier_ops=r.tier_ops, fusion="none")
+        np.testing.assert_allclose(
+            r.logits, np.asarray(want)[:r.pg.num_nodes],
+            rtol=2e-4, atol=2e-4)
+
+    # a dispatch never mixes fusion modes: replay the composition check
+    # through the engine's own batch-key fold
+    from repro.runtime.gnn_server import pending_stats
+    stats = pending_stats(done)
+    assert all(len(k) == 5 for k in stats)
+
+
+def test_register_model_fusion_default_and_validation():
+    from repro.runtime.gnn_server import GraphServe, GraphServeConfig
+
+    eng = GraphServe(GraphServeConfig(ladder=BucketLadder(buckets=(128,)),
+                                      batch_slots=2, return_logits=True),
+                     seed=0)
+    cfg = GNNConfig(kind="gcn", in_feats=12, hidden=8, num_classes=4)
+    with pytest.raises(ValueError, match="fusion"):
+        eng.register_model("bad", cfg, fusion="bogus")
+    eng.register_model("gcn", cfg, fusion="layer")
+    eng.warmup()
+    # the model default routes requests to fused plans without a per-call
+    # override; an explicit "none" still serves unfused
+    eng.submit(_traffic_graph(40, seed=0), model="gcn")
+    eng.submit(_traffic_graph(40, seed=1), model="gcn", fusion="none")
+    done = eng.run()
+    eng.assert_warm()
+    assert [r.fusion for r in sorted(done, key=lambda r: r.uid)] == \
+        ["layer", "none"]
+    with pytest.raises(ValueError, match="fusion"):
+        eng.submit(_traffic_graph(10, seed=2), model="gcn", fusion="bogus")

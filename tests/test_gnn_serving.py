@@ -76,14 +76,15 @@ def test_stack_padded_rejects_mixed_buckets():
 
 
 def test_compiled_blobs_equal_distinct_plans(engine):
-    # after warmup: one plan trace per (kind, bucket) plus one CacheG
-    # materializer trace per (kind, bucket) — the 9 mixed-size requests all
+    # after warmup: one plan trace per (kind, bucket, fusion mode) — warmup
+    # pre-traces BOTH fusion modes (DESIGN.md §11) — plus one CacheG
+    # materializer trace per (kind, bucket); the 9 mixed-size requests all
     # replayed warm blobs
-    assert engine.compiled_blobs == len(engine.models) * len(BUCKETS) * 2
+    assert engine.compiled_blobs == len(engine.models) * len(BUCKETS) * 3
     engine.assert_warm()
     s = engine.summary()
     assert s["requests"] == len(SIZES)
-    assert s["compiled_blobs"] == len(engine.models) * len(BUCKETS) * 2
+    assert s["compiled_blobs"] == len(engine.models) * len(BUCKETS) * 3
 
 
 def test_requests_span_all_buckets(engine):
@@ -174,9 +175,11 @@ def test_plan_trace_count_tracks_compiles():
     plan(params, x, ops)                    # warm replay: no new trace
     assert plan.trace_count == 1
     # params are runtime args, so the plan's identity is the full config —
-    # models sharing (cfg, capacity, batch, techniques, backend) share one
-    # blob; "dense" is the default aggregation backend (DESIGN.md §10)
-    assert plan.key == (cfg, 128, 2, DEFAULT_TECHNIQUES["gcn"], "dense")
+    # models sharing (cfg, capacity, batch, techniques, backend, fusion)
+    # share one blob; "dense" is the default aggregation backend
+    # (DESIGN.md §10) and "none" the default fusion mode (§11)
+    assert plan.key == (cfg, 128, 2, DEFAULT_TECHNIQUES["gcn"], "dense",
+                        "none")
 
 
 def test_identical_models_share_one_blob():
@@ -189,8 +192,9 @@ def test_identical_models_share_one_blob():
     eng.register_model("tenant_a", cfg)
     eng.register_model("tenant_b", cfg)
     eng.warmup()
-    # one shared plan trace + one CacheG materializer trace for the bucket
-    assert eng.compiled_blobs == 2
+    # one shared plan trace per fusion mode (warmup pre-traces both,
+    # DESIGN.md §11) + one CacheG materializer trace for the bucket
+    assert eng.compiled_blobs == 3
     eng.submit(_graph(50, 0), model="tenant_a")
     eng.submit(_graph(60, 1), model="tenant_b")
     eng.run()
@@ -236,8 +240,8 @@ def test_serving_benchmark_emits_throughput_rows():
     lat = [r for r in rows if n_matches(r["name"], "latency")][0]
     assert "p50=" in lat["derived"] and "p99=" in lat["derived"]
     blobs = [r for r in rows if n_matches(r["name"], "compiled_blobs")][0]
-    # 2 kinds x 3 buckets x (plan + CacheG materializer)
-    assert blobs["derived"].startswith("12 ")
+    # 2 kinds x 3 buckets x (2 fusion-mode plans + CacheG materializer)
+    assert blobs["derived"].startswith("18 ")
 
 
 def n_matches(name, suffix):

@@ -4,7 +4,9 @@ Hypothesis-driven randomized properties over the whole serving stack:
 random graphs × kinds (GCN/GAT/SAGE) × quality tiers served through the
 deterministic pipeline scheduler must equal the sequential single-request
 forward; the `grasp` aggregation backend must match the `dense` backend
-across kinds × edge densities × tiers; the CacheG/SymG pack→unpack
+across kinds × edge densities × tiers; fused per-layer serving
+(`fusion="layer"`, DESIGN.md §11) must equal unfused serving over the same
+traffic; the CacheG/SymG pack→unpack
 transfer forms (including the budget-padded GraSp block form) must
 round-trip losslessly; NodePad's admission rule and the per-bucket
 `grasp_max_nnz` budget must be monotone. Skipped without hypothesis
@@ -161,6 +163,51 @@ def test_grasp_backend_logits_equal_dense(case):
         np.testing.assert_allclose(r.logits, ref[uid].logits,
                                    atol=1e-4, rtol=1e-4)
         np.testing.assert_array_equal(r.preds, ref[uid].preds)
+
+
+# ------------------------------------------- differential: fused == unfused
+
+
+@st.composite
+def fusion_traffic(draw):
+    kind = draw(st.sampled_from(KINDS))
+    k = draw(st.integers(1, 4))
+    reqs = [(draw(st.integers(10, 200)),             # num_nodes
+             draw(st.integers(0, 2 ** 16)),          # graph seed
+             draw(st.sampled_from((None,) + STANDARD_TIERS)),
+             draw(st.sampled_from((None, "none", "layer"))))
+            for _ in range(k)]
+    return kind, reqs
+
+
+@given(fusion_traffic())
+def test_fused_serving_logits_equal_unfused(case):
+    """DESIGN.md §11 differential: ANY mix of graph sizes, tiers and fusion
+    modes served through the deterministic pipeline equals the UNFUSED
+    sequential forward, and the engine replays entirely warm — fusion is a
+    pre-traced plan dimension, never a recompile. Tolerance is looser than
+    the unfused differential (2e-4 vs 2e-5) because the fused GAT kernel
+    folds the attention mask additively before softmax instead of applying
+    an exact where-mask after."""
+    kind, reqs = case
+    eng = _engine(kind)
+    with eng.scheduler(PipelineConfig(deterministic=True)) as sched:
+        for n, seed, tier, fusion in reqs:
+            sched.submit(_graph(n, seed), model=kind, tier=tier,
+                         fusion=fusion)
+        out = sched.drain()
+    assert len(out) == len(reqs) and all(r.done for r in out)
+    e = eng.models[kind]
+    for r, (_, _, _, fusion) in zip(out, reqs):
+        assert r.fusion == (fusion or "none")
+        ref = forward_grannite(e.params, e.cfg, jnp.asarray(r.pg.features),
+                               r.ops, e.tiers[r.tier],
+                               quant=e.calibrations.get(r.tier),
+                               tier_ops=r.tier_ops, fusion="none")
+        np.testing.assert_allclose(r.logits,
+                                   np.asarray(ref)[: r.pg.num_nodes],
+                                   rtol=2e-4, atol=2e-4)
+    eng.assert_warm()
 
 
 # --------------------------------------------------- pack/unpack round-trips

@@ -96,19 +96,20 @@ def test_every_kind_serves_all_standard_tiers(kind):
 
 
 def test_tier_plans_counted_in_compiled_blobs():
-    """Warmup compiles one plan per DISTINCT tier Techniques per bucket —
-    GCN's int8+grax aliases int8 (no GrAx variant), so 3 named tiers cost 2
-    plan traces — plus the shared CacheG materializer trace and, for QuantGr
-    GCN tiers, the per-bucket tier-operand deriver (int8 Â), all inside the
+    """Warmup compiles one plan per DISTINCT tier Techniques per bucket
+    AND per fusion mode (both pre-traced, DESIGN.md §11) — GCN's int8+grax
+    aliases int8 (no GrAx variant), so 3 named tiers cost 2×2 plan traces —
+    plus the shared CacheG materializer trace and, for QuantGr GCN tiers,
+    the per-bucket tier-operand deriver (int8 Â), all inside the
     zero-recompile contract."""
     eng = _engine("gcn")
-    # fp32 + int8(=int8+grax) plans, materializer, int8-Â deriver
-    assert eng.compiled_blobs == 2 + 1 + 1
+    # (fp32 + int8(=int8+grax)) × 2 fusion modes, materializer, int8-Â deriver
+    assert eng.compiled_blobs == 2 * 2 + 1 + 1
     eng = _engine("gat")
-    assert eng.compiled_blobs == 3 + 1      # no deriver: model-level quant
+    assert eng.compiled_blobs == 3 * 2 + 1  # no deriver: model-level quant
     # untier'd registration stays a single-plan engine (back-compat)
     eng = _engine("gcn", tiers=None)
-    assert eng.compiled_blobs == 1 + 1
+    assert eng.compiled_blobs == 1 * 2 + 1
 
 
 def test_zero_recompiles_across_mixed_tier_traffic():
