@@ -14,7 +14,7 @@ bytes, and accuracy delta through GraphServe (DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -703,6 +703,113 @@ def grasp_serving(dataset: str = "cora", *, cap: int = 1024,
         f"batch={batch_slots}; on a CPU host the kernel routing is 'ref', "
         f"so every grasp REQUEST also counts a backend_fallback — the "
         f"skip grid only runs on TPU/interpret)"))
+    return rows
+
+
+def sharded_serving(dataset: str = "synthetic", *, quick: bool = True,
+                    n_queries: Optional[int] = None,
+                    seed: int = 0) -> List[Dict]:
+    """Sharded serving of a partitioned giant graph (DESIGN.md §12):
+    throughput vs device count with compressed halo exchange.
+
+    One community-clustered GCN graph larger than any single ladder rung
+    is served at shard counts 1/2/4/8 — count 1 through the ordinary
+    unsharded engine at the full-capacity bucket (the baseline), counts
+    >= 2 through engines configured to auto-shard (`shard_counts=(s,)`),
+    each warmed before traffic. `us_per_call` is the measured per-query
+    wall-clock; `modelled_s` (hence `measured_vs_modelled`) is
+    `core.partition.modelled_sharded_latency` — per-shard compute at the
+    derated MXU roofline plus one compressed-halo collective per
+    exchanged layer width at the host-link bandwidth. The scaling CLAIM
+    lives in the modelled column: per-shard compute falls ~1/S while the
+    int8 wire term grows slowly, so modelled throughput is monotone in
+    the device count. The measured column shows what this host actually
+    did — on a 1-CPU box every shard computes serially under a
+    vmap-simulated axis (placement is recorded per row), so measured
+    throughput only follows the model on the CI multi-device leg
+    (XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+    import time as _time
+
+    import jax as _jax
+
+    from repro.core.graph import BucketLadder
+    from repro.core.partition import (modelled_sharded_latency,
+                                      partition_graph)
+    from repro.core.models import sharded_exchange_widths
+    from repro.data.graphs import clustered_like
+    from repro.runtime.gnn_server import GraphServe, GraphServeConfig
+
+    in_feats, hidden, classes = 16, 256, 5
+    all_buckets = (128, 256, 512, 1024, 2048)
+    # n is picked so every doubling of the shard count halves the ladder
+    # bucket (1800 -> loads 1800/900/450/225 -> buckets 2048/1024/512/256):
+    # the full sharded capacity S x bucket stays constant, so the modelled
+    # per-shard aggregation cost genuinely falls ~1/S instead of being
+    # masked by bucket-floor over-padding at high shard counts. hidden=256
+    # keeps that aggregation term above the collective latency floor —
+    # smaller widths would make the model (correctly) report that sharding
+    # a trivial graph is all wire and no win.
+    n = 1800
+    cfg = GNNConfig(kind="gcn", in_feats=in_feats, hidden=hidden,
+                    num_classes=classes)
+    n_queries = n_queries if n_queries is not None else (2 if quick else 4)
+    g = clustered_like(num_nodes=n, num_feats=in_feats,
+                       num_classes=classes, within_density=0.02,
+                       cross_frac=0.05, seed=seed)
+    full_ladder = BucketLadder(buckets=all_buckets)
+    rows, modelled_rps = [], []
+    for shards in (1, 2, 4, 8):
+        load = -(-n // shards)
+        bucket = full_ladder.bucket_for(load)
+        if shards == 1:
+            sc = GraphServeConfig(ladder=BucketLadder(buckets=(bucket,)),
+                                  batch_slots=1)
+            part = partition_graph(g.edge_index, n, 1, shard_cap=bucket)
+        else:
+            # a one-rung ladder the graph EXCEEDS, so attach() must take
+            # the sharded path at exactly this shard count
+            sc = GraphServeConfig(ladder=BucketLadder(buckets=(bucket,)),
+                                  batch_slots=1, shard_counts=(shards,))
+        eng = GraphServe(sc, seed=seed)
+        eng.register_model("gcn", cfg)
+        eng.warmup()
+        gid = eng.attach(g, model="gcn", calibrate=False)
+        if shards > 1:
+            part = eng._sharded[gid][0]
+        # untimed first query: once-per-(graph, version) work (operand /
+        # shard-slice build) is attach-time cost, not steady-state latency
+        eng.query(gid)
+        eng.run()
+        t0 = _time.perf_counter()
+        for _ in range(n_queries):
+            eng.query(gid)
+            eng.run()
+        wall = (_time.perf_counter() - t0) / n_queries
+        eng.assert_warm()
+        modelled = modelled_sharded_latency(
+            part, in_feats=in_feats, hidden=hidden, classes=classes,
+            exchange_widths=sharded_exchange_widths(cfg))
+        modelled_rps.append(1.0 / modelled)
+        s = eng.summary()
+        placement = ("shard_map" if 1 < shards <= len(_jax.devices())
+                     else ("vmap" if shards > 1 else "unsharded"))
+        rows.append(record(
+            f"sharded_serving/gcn/{dataset}/shards{shards}", wall,
+            f"devices={min(shards, len(_jax.devices()))} "
+            f"placement={placement} bucket={bucket} "
+            f"modelled_rps={1.0 / modelled:.0f} "
+            f"halo_bytes={s['halo_bytes_exchanged']} "
+            f"exact_bytes={s['collective_bytes_exact']} "
+            f"cut_edges={part.cut_edges}",
+            modelled_s=modelled))
+        eng.detach(gid)
+    mono = all(b >= a for a, b in zip(modelled_rps, modelled_rps[1:]))
+    rows.append(record(
+        f"sharded_serving/gcn/{dataset}/scaling", 0.0,
+        f"modelled_rps={'/'.join(f'{r:.0f}' for r in modelled_rps)} over "
+        f"1/2/4/8 shards monotone={mono} (per-shard aggregation ~1/S, "
+        f"int8 halo wire grows ~2(S-1)/S; compressed wire is 4x cheaper "
+        f"than exact fp32)"))
     return rows
 
 

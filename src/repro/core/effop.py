@@ -76,6 +76,10 @@ def masked_max_aggregate(h: jnp.ndarray, mask01: jnp.ndarray,
     is 45 TB for Cora layer 1) — this is also the Pallas kernel's tiling.
 
     exact path: additive -inf bias (select-based), correct for any sign.
+
+    `mask01` may be rectangular (rows, cols) — the sharded serving path
+    (DESIGN.md §12) aggregates a shard's OWN rows against the FULL column
+    space, so only the row axis is tiled; `h` must have cols rows.
     """
     n = mask01.shape[0]
     rb = min(row_block, n)
@@ -92,7 +96,7 @@ def masked_max_aggregate(h: jnp.ndarray, mask01: jnp.ndarray,
 
     if n % rb:
         return block(mask01)
-    blocks = mask01.reshape(n // rb, rb, n)
+    blocks = mask01.reshape(n // rb, rb, mask01.shape[1])
     # checkpoint: the (rb, N, F) product is recomputed in backward instead
     # of 22 blocks' residuals living at once (44 GB for Cora layer 1)
     return jax.lax.map(jax.checkpoint(block), blocks).reshape(n, h.shape[1])

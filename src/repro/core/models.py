@@ -753,8 +753,8 @@ def forward_grannite(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
 #           grasp_max_nnz budget; dense plans must carry None).
 AGG_BACKENDS = ("dense", "grasp")
 
-# (cfg, capacity, batch, techniques, backend, fusion)
-PlanKey = Tuple[GNNConfig, int, int, Techniques, str, str]
+# (cfg, capacity, batch, techniques, backend, fusion, shards)
+PlanKey = Tuple[GNNConfig, int, int, Techniques, str, str, int]
 
 
 @dataclasses.dataclass
@@ -783,6 +783,11 @@ class ExecutionPlan:
     `fusion` is the orthogonal execution-schedule dimension (DESIGN.md §11):
     "layer" plans run each layer as ONE fused kernel pass — same tier math,
     different compiled blob, hence part of the key.
+    `shards` > 0 marks a SHARDED plan (DESIGN.md §12): `capacity` is then
+    the per-shard row bucket, the leading dim of x/operands is the shard
+    axis (not a batch), and the trace includes the halo-exchange
+    collectives — a different blob per shard count, hence part of the key
+    (0 = the ordinary unsharded plan).
     """
     cfg: GNNConfig
     techniques: Techniques
@@ -790,6 +795,7 @@ class ExecutionPlan:
     batch_size: int = 0                       # 0 = single-graph plan
     backend: str = "dense"
     fusion: str = "none"
+    shards: int = 0                           # 0 = unsharded plan
     fn: Callable = dataclasses.field(default=None, repr=False)
     trace_count: int = 0
     # Captured AT TRACE TIME for grasp plans: True when the kernel routing
@@ -801,11 +807,14 @@ class ExecutionPlan:
     @property
     def key(self) -> PlanKey:
         return (self.cfg, self.capacity, self.batch_size, self.techniques,
-                self.backend, self.fusion)
+                self.backend, self.fusion, self.shards)
 
     def __call__(self, params: Dict, x: jnp.ndarray, ops_: GranniteOperands,
                  quant: Optional[Dict] = None,
-                 tier_ops: Optional[TierOperands] = None) -> jnp.ndarray:
+                 tier_ops: Optional[TierOperands] = None,
+                 node_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        if self.shards:
+            return self.fn(params, x, ops_, node_mask, quant)
         return self.fn(params, x, ops_, quant, tier_ops)
 
 
@@ -860,6 +869,284 @@ def build_plan(cfg: GNNConfig, capacity: int, t: Techniques, *,
     else:
         plan.fn = jax.jit(_forward)
     return plan
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution (DESIGN.md §12) — GraphSplit across N devices.
+#
+# A graph too large for the ladder's top bucket is row-partitioned
+# (core.partition.partition_graph): shard s owns slot rows
+# [s*shard_cap, (s+1)*shard_cap) of a permuted full-capacity layout. Each
+# layer runs as: project OWN rows -> halo-exchange the projected rows into
+# the full row space (one int8-compressed psum of disjoint zero-padded
+# blocks, dist.compress) -> aggregate OWN rows against the FULL space
+# through a rectangular (shard_cap, full_rows) operand row block. Row
+# blocks keep complete Â rows, so per-row quantization scales — and hence
+# the int8 tier numerics — match the single-device path exactly; the only
+# sharding-induced error is the wire compression (<= scale/2 per element,
+# zero when halo_compress is off).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardSlice:
+    """One shard's device-resident operand slice.
+
+    The serving CacheG unit for sharded graphs: cached per
+    (graph_id, structure_version, shard) and stacked along a leading shard
+    axis at dispatch (`stack_shard_slices`).
+    """
+    x: jnp.ndarray              # (shard_cap, F) this shard's feature rows
+    ops: GranniteOperands       # kind fields (shard_cap, full_rows); holes (1,1)
+    node_mask: jnp.ndarray      # (shard_cap,) 1.0 real / 0.0 padding
+
+
+def build_sharded_operands(g, part, cfg: GNNConfig, *,
+                           rng: Optional[np.random.Generator] = None
+                           ) -> Tuple[ShardSlice, ...]:
+    """Host side of N-way GraphSplit: per-shard operand row blocks.
+
+    Builds the ordinary full-capacity operands once (identical math to the
+    unsharded path — including SAGE's seeded neighbor sampling, so the
+    sharded forward is differentially testable against it), permutes rows
+    AND columns into the slot layout, and slices shard row blocks. Padding
+    is interleaved per shard; padded rows/cols are zero, hence inert.
+    """
+    from .graph import pad_graph
+    pg = pad_graph(g, capacity=part.full_rows)
+    ops = build_operands(pg, cfg, lean=True, rng=rng)
+    perm = part.perm
+    fields = OPERAND_FIELDS[cfg.kind]
+    mats = {f: np.asarray(getattr(ops, f))[perm][:, perm] for f in fields}
+    feats = pg.features[perm]
+    mask = (perm < pg.num_nodes).astype(np.float32)
+    hole = jnp.zeros((1, 1), jnp.float32)
+    c = part.shard_cap
+    out = []
+    for s in range(part.shards):
+        rows = slice(s * c, (s + 1) * c)
+        vals = {k: hole for k in ("norm_adj", "mask_mult", "bias_add",
+                                  "sample_mask", "mean_mask")}
+        for f in fields:
+            vals[f] = jnp.asarray(mats[f][rows])
+        out.append(ShardSlice(x=jnp.asarray(feats[rows]),
+                              ops=GranniteOperands(**vals),
+                              node_mask=jnp.asarray(mask[rows])))
+    return tuple(out)
+
+
+def stack_shard_slices(slices: Sequence[ShardSlice]
+                       ) -> Tuple[jnp.ndarray, GranniteOperands, jnp.ndarray]:
+    """Stack per-shard slices -> (x, ops, node_mask) with a leading shard
+    axis, the sharded plan's calling convention."""
+    return (jnp.stack([s.x for s in slices]),
+            stack_operands([s.ops for s in slices]),
+            jnp.stack([s.node_mask for s in slices]))
+
+
+def unshard_logits(stacked: np.ndarray, part) -> np.ndarray:
+    """(shards, shard_cap, classes) slot-ordered logits -> (num_nodes,
+    classes) in the original node order (inverse of `part.perm`)."""
+    flat = np.asarray(stacked).reshape(part.full_rows, -1)
+    out = np.empty_like(flat)
+    out[part.perm] = flat
+    return out[: part.num_nodes]
+
+
+def halo_exchange(h_own: jnp.ndarray, node_mask: jnp.ndarray, *,
+                  shard_cap: int, full_rows: int, axis_name: str = "shard",
+                  compress: bool = True) -> jnp.ndarray:
+    """Assemble the full (full_rows, width) matrix from per-shard row blocks.
+
+    Each shard writes its (masked) rows into its slot range of a zeroed
+    full-height buffer and the buffers are summed across the shard axis —
+    with `compress` the sum is the int8-on-the-wire psum of
+    `dist.compress.compressed_psum` (QuantGr applied to the halo traffic).
+    Because the blocks are disjoint and zeros quantize exactly, every
+    element of the result carries at most scale/2 absolute error, where
+    scale = (global absmax)/127 — the bound the dist unit tests assert.
+    Padded rows are zeroed BEFORE the exchange so softmax garbage in pad
+    rows (GAT) can never inflate the shared compression scale.
+    """
+    from repro.dist.compress import compressed_psum
+    h_own = h_own * node_mask[:, None]
+    idx = jax.lax.axis_index(axis_name)
+    buf = jnp.zeros((full_rows, h_own.shape[1]), h_own.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, h_own, (idx * shard_cap, 0))
+    if compress:
+        full, _ = compressed_psum(buf, axis_name)
+        return full
+    return jax.lax.psum(buf, axis_name)
+
+
+def forward_grannite_sharded(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
+                             ops_: GranniteOperands, node_mask: jnp.ndarray,
+                             t: Techniques, quant: Optional[Dict] = None, *,
+                             shard_cap: int, full_rows: int,
+                             axis_name: str = "shard",
+                             compress: bool = True) -> jnp.ndarray:
+    """One shard's slice of a sharded GraNNite forward (DESIGN.md §12).
+
+    Runs under an SPMD shard axis (`shard_map` or a vmap-simulated axis):
+    `x` is this shard's (shard_cap, F) feature rows, `ops_` carries
+    rectangular (shard_cap, full_rows) operand row blocks, and the return
+    value is this shard's (shard_cap, num_classes) logit rows in slot
+    order. Exchange schedule per kind: GCN exchanges the projected hidden
+    rows (widths hidden then classes); GAT the per-head projections; SAGE
+    the aggregation INPUTS (raw features then layer-1 activations). QuantGr
+    GCN derives the int8 Â from the row block in-trace — complete rows
+    quantize to exactly the single-device scales, so no sharded tier-operand
+    cache is needed.
+    """
+    from .quant import (QuantizedAgg, apply_quantized_agg,
+                        apply_quantized_linear, quantize_rowwise)
+    tq = (quant or {}) if t.quantgr else {}
+
+    def _exchange(h_own):
+        return halo_exchange(h_own, node_mask, shard_cap=shard_cap,
+                             full_rows=full_rows, axis_name=axis_name,
+                             compress=compress)
+
+    if cfg.kind == "gcn":
+        def _layer(p, v_own, ql, h_scale):
+            h_own = (apply_quantized_linear(v_own, ql)
+                     if ql is not None else v_own @ p["w"])
+            h_full = _exchange(h_own)
+            if h_scale is not None:
+                aq, a_scale = quantize_rowwise(ops_.norm_adj)
+                agg = apply_quantized_agg(
+                    QuantizedAgg(aq=aq, a_scale=a_scale, h_scale=h_scale),
+                    h_full)
+            else:
+                agg = ops_.norm_adj @ h_full
+            return agg + p["b"]
+
+        h = jax.nn.relu(_layer(params["l1"], x, tq.get("l1"),
+                               tq.get("agg1_h")))
+        return _layer(params["l2"], h, tq.get("l2"), tq.get("agg2_h"))
+
+    if cfg.kind == "gat":
+        def _layer(p, v_own, heads, f_out, ql):
+            h_own = (apply_quantized_linear(v_own, ql)
+                     if ql is not None else v_own @ p["w"])
+            h_full = _exchange(h_own).reshape(full_rows, heads, f_out)
+            h_mine = h_own.reshape(shard_cap, heads, f_out)
+            a_src = jnp.einsum("nhf,hf->nh", h_full, p["a_src"])  # (full, H)
+            a_dst = jnp.einsum("nhf,hf->nh", h_mine, p["a_dst"])  # (C, H)
+            outs = []
+            for hd in range(heads):
+                e = effop.broadcast_add_scores(a_src[:, hd], a_dst[:, hd],
+                                               grax2=t.grax2)   # (C, full)
+                e = jax.nn.leaky_relu(e, negative_slope=0.2)
+                if t.grax1:
+                    attn = effop.segment_softmax_dense(e, ops_.bias_add)
+                else:
+                    e = effop.masked_select_exact(e, ops_.mask_mult)
+                    attn = jax.nn.softmax(e, axis=-1)
+                outs.append(attn @ h_full[:, hd, :])
+            out = jnp.stack(outs, axis=1).reshape(shard_cap, heads * f_out)
+            return out + p["b"]
+
+        per_head = cfg.hidden // cfg.heads
+        h = jax.nn.elu(_layer(params["l1"], x, cfg.heads, per_head,
+                              tq.get("l1")))
+        return _layer(params["l2"], h, 1, cfg.num_classes, tq.get("l2"))
+
+    if cfg.kind == "sage":
+        def _lin(v, w, ql):
+            return apply_quantized_linear(v, ql) if ql is not None else v @ w
+
+        def _layer(p, v_own, q):
+            q = q or {}
+            v_full = _exchange(v_own)
+            if cfg.aggregator == "mean":
+                agg = ops_.mean_mask @ v_full
+            else:
+                pooled = jax.nn.relu(_lin(v_full, p["w_pool"], q.get("pool"))
+                                     + p["b_pool"])
+                agg = effop.masked_max_aggregate(pooled, ops_.sample_mask,
+                                                 grax3=t.grax3)
+            return (_lin(v_own, p["w_self"], q.get("self"))
+                    + _lin(agg, p["w_neigh"], q.get("neigh")) + p["b"])
+
+        h = jax.nn.relu(_layer(params["l1"], x, tq.get("l1")))
+        return _layer(params["l2"], h, tq.get("l2"))
+    raise ValueError(cfg.kind)
+
+
+def build_sharded_plan(cfg: GNNConfig, shard_cap: int, shards: int,
+                       t: Techniques, *, compress: bool = True
+                       ) -> ExecutionPlan:
+    """Sharded ExecutionPlan: per-shard aggregate+combine under a shard
+    axis, halo exchange as a compressed psum (DESIGN.md §12).
+
+    Placement: with >= `shards` devices the plan runs under `shard_map` on
+    a 1-D shard mesh (`launch.mesh.make_shard_mesh`), in/out specs derived
+    through the `dist.sharding` rules ("graph_shard" -> "shard", everything
+    else replicated). With fewer devices — the common 1-CPU test box — the
+    shard axis is vmap-simulated (`axis_name` collectives are identical),
+    so the plan's math and trace structure never depend on device count.
+    Sharded plans are dense, fusion="none", single-graph (the shard axis
+    occupies the leading dim a batched plan would use); call with
+    `plan(params, x, ops, quant, node_mask=mask)`.
+    """
+    plan = ExecutionPlan(cfg=cfg, techniques=t, capacity=shard_cap,
+                         batch_size=0, backend="dense", fusion="none",
+                         shards=shards)
+    full_rows = shards * shard_cap
+
+    def _forward(params, x, ops_, mask, quant):
+        plan.trace_count += 1                 # python side effect: traces only
+        return forward_grannite_sharded(
+            params, cfg, x, ops_, mask, t, quant=quant, shard_cap=shard_cap,
+            full_rows=full_rows, axis_name="shard", compress=compress)
+
+    if shards > 1 and len(jax.devices()) >= shards:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.dist.sharding import spec_for_axes
+        from repro.launch.mesh import make_shard_mesh
+        try:
+            from jax.experimental.shard_map import shard_map
+        except ImportError:                   # newer jax moved it
+            from jax import shard_map
+        mesh = make_shard_mesh(shards)
+        row = spec_for_axes(("graph_shard",), (shards,), mesh)
+        x_spec = P(*row, None, None)
+        mask_spec = P(*row, None)
+
+        def _spmd(params, x, ops_, mask, quant):
+            # shard_map leaves keep a leading dim of 1 (= shards/shards)
+            sq = lambda l: l.reshape(l.shape[1:])
+            out = _forward(params, sq(x), jax.tree_util.tree_map(sq, ops_),
+                           sq(mask), quant)
+            return out[None]
+
+        plan.fn = jax.jit(shard_map(
+            _spmd, mesh=mesh,
+            in_specs=(P(), x_spec, P(*row), mask_spec, P()),
+            out_specs=x_spec, check_rep=False))
+    else:
+        plan.fn = jax.jit(jax.vmap(_forward, in_axes=(None, 0, 0, 0, None),
+                                   axis_name="shard"))
+    return plan
+
+
+def sharded_exchange_widths(cfg: GNNConfig) -> Tuple[int, ...]:
+    """Per-layer halo widths `forward_grannite_sharded` exchanges (§12).
+
+    GCN moves the projected hidden rows then the class rows; GAT the
+    concatenated per-head layer-1 projections then the single-head class
+    rows; SAGE the aggregation INPUTS (raw features, then the layer-1
+    activations). One source of truth for the serving engine's collective
+    byte accounting and the benchmark's modelled latency — if the exchange
+    schedule changes, both move with it.
+    """
+    if cfg.kind == "gcn":
+        return (cfg.hidden, cfg.num_classes)
+    if cfg.kind == "gat":
+        return (cfg.heads * (cfg.hidden // cfg.heads), cfg.num_classes)
+    return (cfg.in_feats, cfg.hidden)
 
 
 # ---------------------------------------------------------------------------

@@ -18,12 +18,19 @@ numpy) <-> device(TPU, jit) split:
 `measure=True` swaps modelled latencies for real timeit measurements of the
 provided callables — the paper's "offline profiling phase during model
 calibration".
+
+This module also hosts the N-way *device* partitioner (DESIGN.md §12): a
+greedy edge-cut over the graph that splits an oversized graph into
+bucket-admissible row shards plus halo (boundary-node) index sets, and the
+modelled cost of serving it sharded (per-shard compute + compressed-halo
+collective bytes over the link). Host-side numpy only — `core.models`
+builds the device operands from the `GraphShards` this module emits.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,6 +38,15 @@ import numpy as np
 # penalizes chatty partitions, as on a real TPU host. See DESIGN.md §2 (3).
 HOST_LINK_BYTES_PER_S = 16e9
 LAUNCH_LATENCY_S = 20e-6
+
+# Device interconnect (ICI-class) — what the sharded serving path's halo
+# collectives cross (DESIGN.md §12). Device-to-device psums never touch the
+# host link: they move over the mesh fabric at an order of magnitude more
+# bandwidth and with a per-collective latency closer to a kernel launch
+# than a PCIe round-trip. Distinct constants so the GraphSplit host/device
+# cut and the N-way shard model cannot silently share the wrong wire.
+DEVICE_LINK_BYTES_PER_S = 100e9
+COLLECTIVE_LATENCY_S = 2e-6
 
 
 @dataclasses.dataclass
@@ -120,3 +136,161 @@ def default_gnn_stages(num_nodes: int, num_edges: int, in_feats: int,
         Stage("aggregate ÂH (StaGr)", flops_aggregate / (2e9), flops_aggregate / MXU,
               output_bytes=cap * out_feats * 4),
     ]
+
+
+# ---------------------------------------------------------------------------
+# N-way device partitioner (DESIGN.md §12) — GraphSplit beyond the host cut.
+# An oversized graph (num_nodes > the ladder's top bucket) is split into
+# `shards` row blocks; each shard owns a contiguous range of SLOTS in a
+# permuted full-capacity layout, computes its own rows, and fetches the
+# hidden states of halo (boundary) nodes from the other shards through one
+# compressed psum per layer exchange.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GraphShards:
+    """Result of the greedy edge-cut: who owns which node, in slot layout.
+
+    Slot layout: shard `s` owns slots [s*shard_cap, (s+1)*shard_cap);
+    `perm[slot]` is the ORIGINAL padded-graph position living in that slot
+    (real node id when < num_nodes, else a padding position). Permuting the
+    full-capacity operands by `perm` on both axes yields the sharded layout;
+    row block `s` of the permuted matrices is exactly shard s's operand.
+    """
+
+    shards: int
+    shard_cap: int                 # slotted rows per shard (a NodePad bucket)
+    num_nodes: int
+    assignment: np.ndarray         # (num_nodes,) int32 owning shard per node
+    perm: np.ndarray               # (shards*shard_cap,) slot -> original pos
+    halo: Tuple[np.ndarray, ...]   # per-shard sorted remote in-neighbor ids
+    loads: np.ndarray              # (shards,) real nodes per shard
+    cut_edges: int                 # edges crossing a shard boundary
+
+    @property
+    def full_rows(self) -> int:
+        return self.shards * self.shard_cap
+
+    @property
+    def halo_nodes(self) -> int:
+        return int(sum(len(h) for h in self.halo))
+
+
+def partition_graph(edge_index: np.ndarray, num_nodes: int, shards: int,
+                    *, shard_cap: int, max_load: Optional[int] = None
+                    ) -> GraphShards:
+    """Greedy edge-cut (streaming LDG-style) over the graph.
+
+    Nodes stream in degree-descending order; each is placed on the shard
+    holding the most of its already-placed neighbors (ties: lightest load,
+    then lowest shard id), under a hard per-shard load cap so every shard
+    stays admissible to its NodePad bucket. Deterministic for a given
+    edge_index — the serving cache keys partitions by structure version.
+    """
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    cap = max_load if max_load is not None else -(-num_nodes // shards)
+    if cap > shard_cap:
+        raise ValueError(
+            f"per-shard load cap {cap} exceeds the shard bucket {shard_cap}")
+    if shards * cap < num_nodes:
+        raise ValueError(
+            f"{shards} shards x load cap {cap} cannot hold {num_nodes} nodes")
+
+    # undirected neighbor structure for placement affinity (CSR via sort)
+    src, dst = edge_index
+    both = np.concatenate([np.stack([src, dst]), np.stack([dst, src])], axis=1)
+    both = both[:, both[0] < num_nodes]
+    both = both[:, both[1] < num_nodes]
+    order = np.argsort(both[0], kind="stable")
+    nbr_flat = both[1][order]
+    starts = np.searchsorted(both[0][order], np.arange(num_nodes + 1))
+    degree = np.diff(starts)
+
+    assignment = np.full((num_nodes,), -1, dtype=np.int32)
+    loads = np.zeros((shards,), dtype=np.int64)
+    # degree-descending, id-ascending within a degree tier (deterministic)
+    stream = np.lexsort((np.arange(num_nodes), -degree))
+    for u in stream:
+        nbrs = nbr_flat[starts[u]: starts[u + 1]]
+        placed = assignment[nbrs]
+        affinity = np.bincount(placed[placed >= 0], minlength=shards)
+        open_ = loads < cap
+        if not open_.any():         # unreachable given the cap check above
+            raise ValueError("no shard with free capacity")
+        score = np.where(open_, affinity, -1)
+        best = score.max()
+        cand = np.flatnonzero(score == best)
+        s = cand[np.argmin(loads[cand])]
+        assignment[u] = s
+        loads[s] += 1
+
+    full = shards * shard_cap
+    perm = np.empty((full,), dtype=np.int64)
+    pad_pos = num_nodes
+    for s in range(shards):
+        own = np.flatnonzero(assignment == s)
+        base = s * shard_cap
+        perm[base: base + len(own)] = own
+        n_pad = shard_cap - len(own)
+        perm[base + len(own): base + shard_cap] = np.arange(
+            pad_pos, pad_pos + n_pad)
+        pad_pos += n_pad
+
+    live = (src < num_nodes) & (dst < num_nodes)
+    ls, ld = src[live], dst[live]
+    cross = assignment[ls] != assignment[ld]
+    halo = tuple(np.unique(ls[cross & (assignment[ld] == s)])
+                 for s in range(shards))
+    return GraphShards(shards=shards, shard_cap=shard_cap,
+                       num_nodes=num_nodes, assignment=assignment, perm=perm,
+                       halo=halo, loads=loads, cut_edges=int(cross.sum()))
+
+
+def partition_for_ladder(edge_index: np.ndarray, num_nodes: int, ladder,
+                         shard_counts: Sequence[int]) -> GraphShards:
+    """Bucket-aware shard-count selection: the smallest configured shard
+    count whose balanced per-shard load admits into the ladder is chosen,
+    and that load's bucket becomes the shard capacity. Raises ValueError
+    when no configured count fits (mirroring `BucketLadder.bucket_for`)."""
+    last_err: Optional[Exception] = None
+    for s in sorted(set(int(c) for c in shard_counts)):
+        if s < 2:
+            continue                 # 1 shard == the unsharded path
+        load = -(-num_nodes // s)
+        try:
+            bucket = ladder.bucket_for(load)
+        except ValueError as e:      # even the balanced load is oversized
+            last_err = e
+            continue
+        return partition_graph(edge_index, num_nodes, s, shard_cap=bucket)
+    raise ValueError(
+        f"graph with {num_nodes} nodes fits no configured shard count "
+        f"{tuple(shard_counts)} on ladder buckets {ladder.buckets}"
+    ) from last_err
+
+
+def modelled_sharded_latency(part: GraphShards, *, in_feats: int, hidden: int,
+                             classes: int, exchange_widths: Sequence[int],
+                             compress: bool = True) -> float:
+    """Modelled per-forward latency of the sharded plan (DESIGN.md §12):
+    per-shard compute (the dominant O(C x full) aggregation scales ~1/S)
+    plus one compressed-halo collective per exchanged layer width, charged
+    at the DEVICE interconnect (the halo psum is device-to-device; it
+    never crosses the host link). A 1-shard partition pays no wire at all
+    — there is nobody to exchange with."""
+    MXU = 197e12 * 0.4              # same derated roofline as default_gnn_stages
+    c, full = part.shard_cap, part.full_rows
+    flops = 2.0 * c * (in_feats * hidden + hidden * classes)      # combine
+    flops += 2.0 * c * full * (hidden + classes)                  # aggregate
+    compute = flops / MXU
+    if part.shards == 1:
+        return compute
+    bytes_per_elt = 1 if compress else 4
+    wire = 0.0
+    for w in exchange_widths:
+        # ring psum moves ~2(S-1)/S of the buffer per participant
+        nbytes = 2 * (part.shards - 1) / part.shards * full * w * bytes_per_elt
+        wire += COLLECTIVE_LATENCY_S + nbytes / DEVICE_LINK_BYTES_PER_S
+    return compute + wire

@@ -32,12 +32,28 @@ def compressed_psum_mean(g: jnp.ndarray, axis_names: AxisNames
     where scale = global_absmax / 127, and residual = g - represented(g) so
     the caller can add it to the next step's gradient (error feedback).
     """
+    total, residual = compressed_psum(g, axis_names)
+    n = jax.lax.psum(jnp.ones((), g.dtype), axis_names)
+    return total / n, residual
+
+
+def compressed_psum(g: jnp.ndarray, axis_names: AxisNames
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8-compressed sum-all-reduce (QuantGr on the wire).
+
+    Returns (sum, residual). Each participant quantizes against one global
+    scale (scale = global_absmax / 127, agreed via a pmax), so every
+    contribution is off by at most scale/2 per element and the summed error
+    is bounded by participants * scale/2. The sharded GNN halo exchange
+    (DESIGN.md §12) relies on a tighter corollary: when the participants'
+    buffers are DISJOINT zero-padded blocks, zeros quantize exactly, each
+    output element receives exactly one non-zero contribution, and the
+    elementwise error stays <= scale/2 regardless of the shard count.
+    """
     amax = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_names)
     scale = jnp.maximum(amax, 1e-12) / INT8_MAX
     q = jnp.clip(jnp.round(g / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
     represented = q.astype(g.dtype) * scale
     residual = g - represented
-    n = jax.lax.psum(jnp.ones((), g.dtype), axis_names)
     # the wire format is int8; the sum accumulates in the working dtype
-    mean = jax.lax.psum(q.astype(g.dtype), axis_names) * scale / n
-    return mean, residual
+    return jax.lax.psum(q.astype(g.dtype), axis_names) * scale, residual

@@ -34,6 +34,10 @@ AXIS_RULES: Dict[str, Optional[str]] = {
     "embed": None,       # contracted in every matmul: replicate
     "kv": None,          # small KV head counts rarely divide; replicate
     "frames": None,
+    # GNN sharded serving (DESIGN.md §12): the leading shard axis of the
+    # row-partitioned operands maps onto the "shard" mesh axis of
+    # launch.mesh.make_shard_mesh; every other operand dim replicates.
+    "graph_shard": "shard",
 }
 
 # Expert parallelism is placement-dependent (capacity vs bandwidth); the

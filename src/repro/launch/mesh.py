@@ -41,3 +41,19 @@ def make_host_mesh(*, data: int | None = None, model: int = 1):
     d = data if data is not None else max(1, len(devs) // model)
     need = d * model
     return Mesh(np.asarray(devs[:need]).reshape(d, model), ("data", "model"))
+
+
+def make_shard_mesh(shards: int):
+    """1-D ("shard",) mesh for sharded GNN serving (DESIGN.md §12).
+
+    One device per graph shard; raises when the host exposes fewer devices
+    (the sharded plan then falls back to a vmap-simulated shard axis, which
+    computes the identical collective math on one device — CI's multi-device
+    leg runs the real SPMD placement under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8).
+    """
+    devs = jax.devices()
+    if len(devs) < shards:
+        raise RuntimeError(
+            f"shard mesh needs {shards} devices, found {len(devs)}")
+    return Mesh(np.asarray(devs[:shards]), ("shard",))

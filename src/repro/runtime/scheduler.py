@@ -11,7 +11,8 @@ exists to hide. The scheduler overlaps them as a two-stage pipeline:
   queue      engine.prepare_submit /        buffer    grouping ready requests
              prepare_query (ladder.pad,     (per      by (model, bucket,
              operand build, CompactOperands batch     tier, agg backend,
-             packing, CacheG lookups)       key)      fusion) and driving
+             packing, CacheG lookups)       key)      fusion, shard count)
+                                                      and driving
                                                       engine._execute_batch
 
 Policies (all per `PipelineConfig`):
@@ -230,7 +231,8 @@ class PipelineScheduler:
                 self._cond.notify_all()
 
     def _push_ready_locked(self, ticket: int, req: GNNRequest) -> None:
-        key = (req.model, req.bucket, req.tier, req.backend, req.fusion)
+        key = (req.model, req.bucket, req.tier, req.backend, req.fusion,
+               req.shards)
         self._ready.setdefault(key, deque()).append(
             (self._arrival_serial, time.perf_counter(), req))
         self._arrival_serial += 1
@@ -245,7 +247,9 @@ class PipelineScheduler:
 
     def _take_locked(self, key: BatchKey) -> List[GNNRequest]:
         q = self._ready[key]
-        n = min(self.engine.sc.batch_slots, len(q))
+        # sharded keys (§12) dispatch width-1: the shard axis occupies the
+        # leading dim a batch would use, so each request is its own dispatch
+        n = 1 if key[5] else min(self.engine.sc.batch_slots, len(q))
         batch = [q.popleft()[2] for _ in range(n)]
         if not q:
             del self._ready[key]

@@ -1,0 +1,124 @@
+"""Unit tests for the idle distributed substrate (DESIGN.md §12 prereqs).
+
+The sharded serving path reuses two pieces of the LM distribution stack
+that previously only ran under the 512-device dry-run: the compressed
+collectives (`dist.compress` — now also the halo-exchange wire format) and
+the rule-based sharding specs (`dist.sharding` — now also the source of the
+shard-mesh PartitionSpecs). These tests pin their contracts on a plain CPU
+host, with the collective axis vmap-simulated — the same simulation
+`build_sharded_plan` falls back to below the device count, so what is
+tested here is literally the serving math.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.compress import (INT8_MAX, compressed_psum,
+                                 compressed_psum_mean, exact_psum_mean)
+from repro.dist.sharding import AXIS_RULES, spec_for_axes
+
+# ------------------------------------------------------ compressed psum
+
+
+def _vaxis(fn, *args):
+    """Run `fn` under a vmap-simulated collective axis named "shard"."""
+    return jax.vmap(fn, axis_name="shard")(*args)
+
+
+def test_compressed_psum_mean_error_bound():
+    """|compressed mean - exact mean| <= scale/2 elementwise, where
+    scale = global_absmax / 127 — the documented QuantGr wire bound."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(4, 64, 8)).astype(np.float32) * 3.0)
+    mean, _ = _vaxis(lambda x: compressed_psum_mean(x, "shard"), g)
+    exact = _vaxis(lambda x: exact_psum_mean(x, "shard"), g)
+    scale = float(np.abs(np.asarray(g)).max()) / INT8_MAX
+    err = np.abs(np.asarray(mean) - np.asarray(exact)).max()
+    assert err <= scale / 2 + 1e-7, (err, scale / 2)
+
+
+def test_compressed_psum_residual_roundtrip():
+    """residual = g - represented(g): adding it back to the represented
+    form reconstructs the input exactly (error-feedback contract), and the
+    residual itself is bounded by scale/2."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(2, 32, 4)).astype(np.float32))
+    _, residual = _vaxis(lambda x: compressed_psum(x, "shard"), g)
+    scale = float(np.abs(np.asarray(g)).max()) / INT8_MAX
+    assert np.abs(np.asarray(residual)).max() <= scale / 2 + 1e-7
+    represented = np.asarray(g) - np.asarray(residual)
+    np.testing.assert_allclose(represented + np.asarray(residual),
+                               np.asarray(g), rtol=0, atol=0)
+
+
+def test_compressed_psum_disjoint_blocks_bound():
+    """The halo-exchange corollary (DESIGN.md §12): when participants hold
+    DISJOINT zero-padded blocks, zeros quantize exactly, each output
+    element receives exactly ONE non-zero contribution, and the elementwise
+    error of the SUM stays <= scale/2 regardless of the shard count."""
+    rng = np.random.default_rng(2)
+    shards, rows, width = 4, 16, 8
+    blocks = np.zeros((shards, shards * rows, width), np.float32)
+    for s in range(shards):
+        blocks[s, s * rows:(s + 1) * rows] = rng.normal(
+            size=(rows, width)).astype(np.float32) * (s + 1)
+    g = jnp.asarray(blocks)
+    total, _ = _vaxis(lambda x: compressed_psum(x, "shard"), g)
+    exact = blocks.sum(axis=0)
+    scale = float(np.abs(blocks).max()) / INT8_MAX
+    # every lane computes the same psum; check lane 0 against the dense sum
+    err = np.abs(np.asarray(total)[0] - exact).max()
+    assert err <= scale / 2 + 1e-7, (err, scale / 2)
+
+
+def test_compressed_psum_sum_consistent_with_mean():
+    """compressed_psum_mean must be exactly compressed_psum / n — one wire
+    format, two reductions."""
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.normal(size=(3, 8, 8)).astype(np.float32))
+    total, r1 = _vaxis(lambda x: compressed_psum(x, "shard"), g)
+    mean, r2 = _vaxis(lambda x: compressed_psum_mean(x, "shard"), g)
+    np.testing.assert_allclose(np.asarray(total) / 3.0, np.asarray(mean),
+                               rtol=0, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+# ------------------------------------------------------- sharding rules
+
+
+class _StubMesh:
+    """Just enough mesh for spec_for_axes: it only reads `.shape`."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_graph_shard_rule_maps_to_shard_axis():
+    assert AXIS_RULES["graph_shard"] == "shard"
+    spec = spec_for_axes(("graph_shard", None, None), (4, 128, 16),
+                         _StubMesh(shard=4))
+    assert tuple(spec) == ("shard", None, None)
+
+
+def test_spec_divisibility_fallback():
+    """A dimension NOT divisible by its mesh axis replicates instead of
+    sharding — the fallback that lets one model definition run on any
+    device count (and the reason a 3-shard mesh never corrupts a 4-row
+    operand)."""
+    spec = spec_for_axes(("graph_shard",), (4,), _StubMesh(shard=3))
+    assert tuple(spec) == (None,)
+    # divisible again -> sharded again
+    spec = spec_for_axes(("graph_shard",), (6,), _StubMesh(shard=3))
+    assert tuple(spec) == ("shard",)
+
+
+def test_spec_missing_axis_and_reuse_fallback():
+    """An axis absent from the mesh replicates; a mesh axis already used by
+    an earlier dim is not used twice."""
+    assert tuple(spec_for_axes(("graph_shard",), (4,), _StubMesh())) == (
+        None,)
+    spec = spec_for_axes(("graph_shard", "graph_shard"), (4, 4),
+                         _StubMesh(shard=4))
+    assert tuple(spec) == ("shard", None)

@@ -272,8 +272,10 @@ def test_plan_key_carries_fusion():
     p_none = build_plan(cfg, pg.capacity, t, fusion="none")
     p_layer = build_plan(cfg, pg.capacity, t, fusion="layer")
     assert p_none.key != p_layer.key
-    assert p_none.key[:-1] == p_layer.key[:-1]
-    assert set(FUSION_MODES) == {p_none.key[-1], p_layer.key[-1]}
+    # fusion is key[5]; key[6] is the §12 shard count (0 = unsharded)
+    assert p_none.key[:5] == p_layer.key[:5]
+    assert p_none.key[6] == p_layer.key[6] == 0
+    assert set(FUSION_MODES) == {p_none.key[5], p_layer.key[5]}
 
 
 # --------------------------------------------------- serving level
@@ -334,7 +336,8 @@ def test_serving_mixed_fusion_zero_recompile_async():
     # through the engine's own batch-key fold
     from repro.runtime.gnn_server import pending_stats
     stats = pending_stats(done)
-    assert all(len(k) == 5 for k in stats)
+    # 6-element batch key: (model, bucket, tier, backend, fusion, shards)
+    assert all(len(k) == 6 and k[5] == 0 for k in stats)
 
 
 def test_register_model_fusion_default_and_validation():

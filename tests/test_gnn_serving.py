@@ -175,11 +175,12 @@ def test_plan_trace_count_tracks_compiles():
     plan(params, x, ops)                    # warm replay: no new trace
     assert plan.trace_count == 1
     # params are runtime args, so the plan's identity is the full config —
-    # models sharing (cfg, capacity, batch, techniques, backend, fusion)
-    # share one blob; "dense" is the default aggregation backend
-    # (DESIGN.md §10) and "none" the default fusion mode (§11)
+    # models sharing (cfg, capacity, batch, techniques, backend, fusion,
+    # shards) share one blob; "dense" is the default aggregation backend
+    # (DESIGN.md §10), "none" the default fusion mode (§11), and 0 shards
+    # the unsharded path (§12)
     assert plan.key == (cfg, 128, 2, DEFAULT_TECHNIQUES["gcn"], "dense",
-                        "none")
+                        "none", 0)
 
 
 def test_identical_models_share_one_blob():

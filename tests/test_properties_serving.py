@@ -6,7 +6,9 @@ deterministic pipeline scheduler must equal the sequential single-request
 forward; the `grasp` aggregation backend must match the `dense` backend
 across kinds × edge densities × tiers; fused per-layer serving
 (`fusion="layer"`, DESIGN.md §11) must equal unfused serving over the same
-traffic; the CacheG/SymG pack→unpack
+traffic; the N-way sharded forward (DESIGN.md §12) must equal the
+single-device forward across kinds × tiers × shard counts × halo wire
+formats; the CacheG/SymG pack→unpack
 transfer forms (including the budget-padded GraSp block form) must
 round-trip losslessly; NodePad's admission rule and the per-bucket
 `grasp_max_nnz` budget must be monotone. Skipped without hypothesis
@@ -26,18 +28,24 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st  # noqa: E402
 
+import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core.graph import (BucketLadder, node_bucket, pad_graph,  # noqa: E402
                               required_capacity, symg_pack, symg_unpack)
 from repro.core.models import (GNNConfig, _unpack_adjacency,  # noqa: E402
-                               compact_operands, forward_grannite)
+                               build_operands, build_sharded_operands,
+                               build_sharded_plan, calibrate_tier,
+                               compact_operands, forward_grannite,
+                               init_params, stack_shard_slices,
+                               unshard_logits)
+from repro.core.partition import partition_graph  # noqa: E402
 from repro.core.sparsity import (from_block_sparse, grasp_max_nnz,  # noqa: E402
                                  pad_block_sparse, stack_block_sparse,
                                  to_block_sparse)
 from repro.data.graphs import planetoid_like  # noqa: E402
 from repro.runtime.gnn_server import (STANDARD_TIERS, GraphServe,  # noqa: E402
-                                      GraphServeConfig)
+                                      GraphServeConfig, tier_techniques)
 from repro.runtime.scheduler import PipelineConfig  # noqa: E402
 
 IN_FEATS, CLASSES = 12, 4
@@ -208,6 +216,74 @@ def test_fused_serving_logits_equal_unfused(case):
                                    np.asarray(ref)[: r.pg.num_nodes],
                                    rtol=2e-4, atol=2e-4)
     eng.assert_warm()
+
+
+# ------------------------------------------ differential: sharded == single
+
+
+SHARD_CAP = 128
+
+# One compiled sharded plan + jitted reference per (kind, tier, shards,
+# compress): shapes are fixed by the key, so every hypothesis example
+# replays warm traces (same economics as the module-scope engines above).
+_SHARDED = {}
+
+
+def _sharded_setup(kind, tier, shards, compress):
+    key = (kind, tier, shards, compress)
+    if key not in _SHARDED:
+        cfg = GNNConfig(kind=kind, in_feats=IN_FEATS, hidden=8,
+                        num_classes=CLASSES, heads=2,
+                        aggregator="max" if kind == "sage" else "mean")
+        t = tier_techniques(kind)[tier]
+        plan = build_sharded_plan(cfg, SHARD_CAP, shards, t,
+                                  compress=compress)
+        ref = jax.jit(lambda p, x, o, q: forward_grannite(p, cfg, x, o, t,
+                                                          quant=q))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        _SHARDED[key] = (cfg, t, plan, ref, params)
+    return _SHARDED[key]
+
+
+@st.composite
+def sharded_case(draw):
+    kind = draw(st.sampled_from(KINDS))
+    shards = draw(st.sampled_from((2, 4)))
+    return (kind,
+            draw(st.sampled_from(STANDARD_TIERS)),
+            shards,
+            draw(st.integers(20, SHARD_CAP * shards)),  # num_nodes
+            draw(st.integers(0, 2 ** 16)),              # graph seed
+            draw(st.booleans()))                        # compressed halos
+
+
+@given(sharded_case())
+def test_sharded_forward_equals_single_device(case):
+    """DESIGN.md §12 differential: ANY (kind, tier, shard count, graph,
+    halo wire format) partitioned through the greedy edge-cut and run under
+    the sharded plan equals the jitted single-device forward at the
+    partition's full capacity. Both sides jitted (the discipline from the
+    QuantGr suites: XLA's reciprocal-multiply lowering shifts int8 round()
+    boundaries between jitted and eager code). Uncompressed halos are
+    numerically tight — the exchange is a psum of disjoint blocks;
+    compressed halos admit the documented int8 wire error."""
+    kind, tier, shards, n, seed, compress = case
+    cfg, t, plan, ref, params = _sharded_setup(kind, tier, shards, compress)
+    g = _graph(n, seed)
+    part = partition_graph(g.edge_index, n, shards, shard_cap=SHARD_CAP)
+    slices = build_sharded_operands(g, part, cfg,
+                                    rng=np.random.default_rng(seed))
+    x, ops, mask = stack_shard_slices(slices)
+    pg = pad_graph(g, capacity=part.full_rows)
+    rops = build_operands(pg, cfg, lean=True,
+                          rng=np.random.default_rng(seed))
+    quant = (calibrate_tier(params, cfg, jnp.asarray(pg.features), rops)
+             if t.quantgr else None)
+    got = unshard_logits(
+        np.asarray(plan(params, x, ops, quant, node_mask=mask)), part)
+    want = np.asarray(ref(params, jnp.asarray(pg.features), rops, quant))[:n]
+    tol = 0.05 if compress else (2e-5 if tier == "fp32" else 2e-3)
+    np.testing.assert_allclose(got, want, atol=tol)
 
 
 # --------------------------------------------------- pack/unpack round-trips

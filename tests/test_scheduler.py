@@ -42,19 +42,21 @@ def _engine(*kinds, batch_slots=3, tiers=None):
 
 def test_best_fill_key_prefers_fullest_then_fairness_then_fifo():
     slots = 3
-    # BatchKey is (model, bucket, tier, agg backend, fusion) — §10/§11
-    stats = {("a", 128, "fp32", "dense", "none"): (1, 0),   # head-of-line
-             ("b", 128, "fp32", "dense", "none"): (3, 1),   # fills the batch
-             ("c", 128, "fp32", "grasp", "layer"): (5, 2)}  # fills (cap 3)
+    # BatchKey is (model, bucket, tier, agg backend, fusion, shards) —
+    # §10/§11/§12
+    stats = {("a", 128, "fp32", "dense", "none", 0): (1, 0),  # head-of-line
+             ("b", 128, "fp32", "dense", "none", 0): (3, 1),  # fills batch
+             ("c", 128, "fp32", "grasp", "layer", 0): (5, 2)}  # fills (cap 3)
     # fullest wins; b vs c tie on capped fill -> FIFO (b arrived first)
-    assert best_fill_key(stats, slots) == ("b", 128, "fp32", "dense", "none")
+    assert best_fill_key(stats, slots) == ("b", 128, "fp32", "dense",
+                                           "none", 0)
     # fairness: b was just dispatched, so the tie now goes to c
     assert best_fill_key(stats, slots,
-                         {"b": 7}) == ("c", 128, "fp32", "grasp", "layer")
+                         {"b": 7}) == ("c", 128, "fp32", "grasp", "layer", 0)
     # a full batch still beats a model that waited longer with a lone req
     assert best_fill_key(stats, slots,
                          {"b": 1, "c": 2}) == ("b", 128, "fp32", "dense",
-                                               "none")
+                                               "none", 0)
 
 
 def test_head_of_line_odd_request_no_longer_forces_partial_batch():
