@@ -349,8 +349,8 @@ def serving_throughput(dataset: str = "cora", *, n_requests: int = 12,
                f"{s['p99_latency_ms']:.1f}ms"),
         record(f"serve/gnn/{dataset}/compiled_blobs", 0.0,
                f"{s['compiled_blobs']} (= kinds x buckets x (2 fusion-mode "
-               f"plans + CacheG materializer), zero recompiles after "
-               f"warmup)"),
+               f"plans + CacheG materializer + GrAd delta patcher), zero "
+               f"recompiles after warmup)"),
         record(f"serve/gnn/{dataset}/batch_occupancy", 0.0,
                f"{s['batch_occupancy']:.2f} of {sc.batch_slots} slots"),
         record(f"serve/gnn/{dataset}/operand_bytes_h2d", 0.0,
@@ -1022,4 +1022,166 @@ def fused_layers(quick: bool = True) -> List[Dict]:
                   + classes * f32 + cap * classes * f32))
     _bench("sage/fp32/dense", cfg_s, params_s, x, ops_s,
            tier_techniques("sage")["fp32"], None, None, fb_sage)
+    return rows
+
+
+# --------------------------------------------- cache pressure (§13)
+
+
+def cache_pressure(dataset: str = "synthetic", *, quick: bool = True,
+                   seed: int = 0) -> List[Dict]:
+    """Bounded CacheG memory hierarchy under churn (DESIGN.md §13).
+
+    Three claims, one row each:
+
+      * churn — attach/query cycles over more tenants than the byte
+        budget admits. The derived column reports the peak
+        `cache_resident_bytes` seen after EVERY step against the budget
+        (the §13 invariant — also enforced, bit-level, by
+        tests/test_cache_pressure.py), plus eviction/spill-fault counts.
+        `assert_warm` holds throughout: eviction and re-materialization
+        replay warm blobs, they never trace.
+      * spill_fault vs warm_hit — per-query wall-clock when the operands
+        must re-materialize from the host-RAM spill form vs when they
+        are device-resident. The gap is the fault penalty: one compact
+        SymG transfer + on-device materialization, zero host repacking.
+      * delta_update vs full_rebuild — end-to-end (update + next query)
+        for a single undirected edge flip via `update_delta` (GrAd
+        device-side patch; the next query HITS the patched entry) vs
+        `update()` (invalidates; the next query rebuilds from scratch).
+        The differential suite proves both end bit-identical; this row
+        reports what the equivalence costs.
+    """
+    import time as _time
+
+    from repro.core.graph import BucketLadder
+    from repro.data.graphs import planetoid_like
+    from repro.runtime.cache import estimate_dense_entry_bytes
+    from repro.runtime.gnn_server import GraphServe, GraphServeConfig
+
+    cap, fin, classes = 128, 32, 5
+    entry = estimate_dense_entry_bytes(1, cap)      # gcn: one Â field
+    budget = 3 * entry + entry // 2                 # ~3 resident tenants
+
+    def _g(i):
+        n = 48 + (i * 13) % 70
+        return planetoid_like(num_nodes=n, num_edges=3 * n, num_feats=fin,
+                              num_classes=classes, seed=seed + i,
+                              train_per_class=2)
+
+    def _engine(**kw):
+        sc = GraphServeConfig(ladder=BucketLadder(buckets=(cap,)),
+                              batch_slots=1, return_logits=True, **kw)
+        eng = GraphServe(sc, seed=seed)
+        eng.register_model("gcn", GNNConfig(kind="gcn", in_feats=fin,
+                                            hidden=16, num_classes=classes))
+        eng.warmup()
+        return eng
+
+    rows: List[Dict] = []
+
+    # --- churn: more tenants than the budget admits ------------------
+    n_graphs = 6 if quick else 12
+    n_cycles = 30 if quick else 120
+    eng = _engine(device_cache_budget_bytes=budget)
+    gids = [eng.attach(_g(i), model="gcn") for i in range(n_graphs)]
+    rng = np.random.default_rng(seed)
+    peak = 0
+    t0 = _time.perf_counter()
+    for _ in range(n_cycles):
+        eng.query(gids[int(rng.integers(n_graphs))])
+        eng.run()
+        peak = max(peak, eng.summary()["cache_resident_bytes"])
+    wall = _time.perf_counter() - t0
+    eng.assert_warm()
+    s = eng.summary()
+    assert peak <= budget, (peak, budget)
+    rows.append(record(
+        f"cache_pressure/{dataset}/churn", wall / n_cycles,
+        f"peak_resident={peak}B <= budget={budget}B over {n_cycles} "
+        f"cycles x {n_graphs} tenants, evictions={s['cache_evictions']} "
+        f"spill_hits={s['cache_spill_hits']}, zero recompiles"))
+
+    # --- spill fault vs warm hit -------------------------------------
+    eng = _engine(device_cache_budget_bytes=2 * entry + entry // 2)
+    a, b, c = (eng.attach(_g(i), model="gcn") for i in range(3))
+    for gid in (a, b, c):                           # first-touch misses
+        eng.query(gid)
+        eng.run()
+    reps = 3 if quick else 10
+    t_fault = t_hit = 0.0
+    for _ in range(reps):
+        for gid in (b, c):                          # evicts `a` (budget=2)
+            eng.query(gid)
+            eng.run()
+        t0 = _time.perf_counter()
+        eng.query(a)                                # faults on the spill form
+        eng.run()
+        t_fault += _time.perf_counter() - t0
+        t0 = _time.perf_counter()
+        eng.query(a)                                # device-resident now
+        eng.run()
+        t_hit += _time.perf_counter() - t0
+    eng.assert_warm()
+    s = eng.summary()
+    rows.append(record(
+        f"cache_pressure/{dataset}/spill_fault", t_fault / reps,
+        f"{t_fault / max(t_hit, 1e-9):.2f}x the warm hit "
+        f"({s['cache_spill_hits']} faults served from the host spill "
+        f"form, {s['operand_bytes_h2d']} compact B h2d)"))
+    rows.append(record(
+        f"cache_pressure/{dataset}/warm_hit", t_hit / reps,
+        f"device-resident query ({s['operand_cache_hits']} hits)"))
+
+    # --- GrAd delta patch vs full rebuild ----------------------------
+    # at a paper-scale rung: the full path re-normalizes the whole
+    # (cap, cap) Â on the host and re-uploads it; the delta path renorms
+    # only the touched rows device-side
+    cap_d = 512 if quick else 1024
+    nd = int(cap_d * 3 / 4)
+    sc = GraphServeConfig(ladder=BucketLadder(buckets=(cap_d,)),
+                          batch_slots=1, return_logits=True)
+    eng = GraphServe(sc, seed=seed)
+    eng.register_model("gcn", GNNConfig(kind="gcn", in_feats=fin,
+                                        hidden=16, num_classes=classes))
+    eng.warmup()
+    g = planetoid_like(num_nodes=nd, num_edges=3 * nd, num_feats=fin,
+                       num_classes=classes, seed=seed + 1,
+                       train_per_class=2)
+    gid = eng.attach(g, model="gcn")
+    eng.query(gid)
+    eng.run()
+    adj = eng.graphs[gid][1].adj
+    j = int(np.flatnonzero(adj[0] == 0)[1])         # absent pair (0, j)
+    pair = (0, j)
+    t0 = _time.perf_counter()
+    for _ in range(reps):
+        eng.update_delta(gid, add_edges=[pair])
+        eng.query(gid)
+        eng.run()
+        eng.update_delta(gid, remove_edges=[pair])
+        eng.query(gid)
+        eng.run()
+    t_delta = (_time.perf_counter() - t0) / (2 * reps)
+    cols = np.array([[0, j], [j, 0]], dtype=g.edge_index.dtype).T
+    ei_plus = np.concatenate([g.edge_index, cols], axis=1)
+    t0 = _time.perf_counter()
+    for _ in range(reps):
+        eng.update(gid, ei_plus, g.num_nodes, g.features)
+        eng.query(gid)
+        eng.run()
+        eng.update(gid, g.edge_index, g.num_nodes, g.features)
+        eng.query(gid)
+        eng.run()
+    t_full = (_time.perf_counter() - t0) / (2 * reps)
+    eng.assert_warm()
+    s = eng.summary()
+    rows.append(record(
+        f"cache_pressure/{dataset}/delta_update", t_delta,
+        f"{t_full / max(t_delta, 1e-9):.2f}x vs full rebuild "
+        f"({s['delta_updates']} patched, {s['delta_fallbacks']} fallbacks; "
+        f"next query hits the patched entry)"))
+    rows.append(record(
+        f"cache_pressure/{dataset}/full_rebuild", t_full,
+        "update() baseline: invalidate + rebuild on the next query"))
     return rows

@@ -7,7 +7,8 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record) and
 writes benchmarks/results.json. ``--bench-json`` additionally writes the
 serving-throughput, CacheG operand-bytes, quality-tier, pipeline-overlap,
-grasp, fused-layer, and sharded-serving rows to a standalone file (CI
+grasp, fused-layer, sharded-serving, and cache-pressure rows to a
+standalone file (CI
 uploads it as the ``BENCH_gnn`` artifact per push to track the perf
 trajectory; the repo-root BENCH_gnn.json is a committed point-in-time
 snapshot — schema in benchmarks/README.md). ``--only`` runs a single
@@ -48,6 +49,7 @@ def _families(args, datasets, gnn_paper, lm_subs):
             cap=512 if q else 1024, n_queries=2 if q else 4),
         "fused_layers": lambda: gnn_paper.fused_layers(quick=q),
         "sharded_serving": lambda: gnn_paper.sharded_serving(quick=q),
+        "cache_pressure": lambda: gnn_paper.cache_pressure(quick=q),
         "lm_subs": lambda: (lm_subs.ssd_vs_sequential(),
                             lm_subs.moe_dispatch_paths(),
                             lm_subs.serving_bucket_reuse()),
@@ -113,6 +115,9 @@ def main() -> None:
     # sharded serving of a partitioned giant graph (DESIGN.md §12):
     # throughput vs shard count with compressed halo exchange
     families["sharded_serving"]()
+    # bounded cache hierarchy under churn + GrAd delta updates
+    # (DESIGN.md §13): eviction/spill-fault costs and delta-vs-rebuild
+    families["cache_pressure"]()
     families["lm_subs"]()
     _write(args, ROWS)
 
@@ -129,7 +134,8 @@ def _write(args, rows) -> None:
                                          "pipeline_overlap/",
                                          "grasp_serving/",
                                          "fused_layers/",
-                                         "sharded_serving/"))]
+                                         "sharded_serving/",
+                                         "cache_pressure/"))]
         with open(args.bench_json, "w") as f:
             json.dump({"rows": perf}, f, indent=1)
         print(f"# wrote {len(perf)} perf rows -> {args.bench_json}")

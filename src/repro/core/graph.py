@@ -349,6 +349,102 @@ def stack_padded(pgs: Sequence[PaddedGraph]) -> BatchedGraphs:
     )
 
 
+@dataclasses.dataclass
+class EdgeDelta:
+    """Host product of one EFFECTIVE GrAd edge delta (DESIGN.md §13).
+
+    `apply_edge_delta` patches the raw adjacency and Â in O(|touched|·cap)
+    instead of the O(cap²) full rebuild, with the renormalized rows/cols
+    computed by the exact expression (and association order) of
+    `gcn_norm_adjacency` — so `norm_adj` here is bit-identical to a full
+    rebuild of the patched structure, and the flip/touched/dis arrays are
+    everything the device-side patcher (`core.models.patch_operands`)
+    needs to bring a cached operand entry to the same bits.
+    """
+    adj: np.ndarray                # (cap, cap) patched raw 0/1 adjacency
+    norm_adj: np.ndarray           # (cap, cap) patched Â, rebuild-exact
+    dis: np.ndarray                # (cap,) patched D^-1/2 (float32)
+    flip_i: np.ndarray             # (P,) int32 canonical flip endpoints
+    flip_j: np.ndarray             # (P,) int32   (i < j; device scatters
+    flip_v: np.ndarray             # (P,) float32  both orientations)
+    touched: np.ndarray            # (T,) int32 sorted nodes with changed
+    #                                rows/cols (the flip endpoints)
+
+
+def apply_edge_delta(adj: np.ndarray, norm_adj: np.ndarray, num_nodes: int,
+                     add_edges, remove_edges) -> Optional[EdgeDelta]:
+    """GrAd incremental structure update on the host (DESIGN.md §13).
+
+    `add_edges` / `remove_edges` are (k, 2) node-pair arrays (any order,
+    both orientations equivalent — the graph is undirected). Ineffective
+    flips (adding a present edge, removing an absent one) and self-loop
+    pairs (the GCN/GAT diagonal is forced, so they cannot change any
+    operand) are skipped; returns None when NOTHING effective remains, so
+    the caller can skip the version bump entirely. Out-of-range nodes and
+    a pair listed on both sides raise — those are caller bugs, not deltas.
+    """
+    def _pairs(edges) -> np.ndarray:
+        e = np.asarray(edges if edges is not None else [],
+                       dtype=np.int64).reshape(-1, 2)
+        if e.size and (e.min() < 0 or e.max() >= num_nodes):
+            raise ValueError(
+                f"edge delta references node outside [0, {num_nodes}) — "
+                "node-set changes take the full update() path")
+        e = e[e[:, 0] != e[:, 1]]
+        if not len(e):
+            return e.reshape(0, 2)
+        lo = np.minimum(e[:, 0], e[:, 1])
+        hi = np.maximum(e[:, 0], e[:, 1])
+        return np.unique(np.stack([lo, hi], axis=1), axis=0)
+
+    adds, removes = _pairs(add_edges), _pairs(remove_edges)
+    if len(adds) and len(removes):
+        both = (set(map(tuple, adds.tolist()))
+                & set(map(tuple, removes.tolist())))
+        if both:
+            raise ValueError(f"edge pair(s) {sorted(both)} listed as both "
+                             "add and remove")
+    if len(adds):
+        adds = adds[adj[adds[:, 0], adds[:, 1]] == 0]
+    if len(removes):
+        removes = removes[adj[removes[:, 0], removes[:, 1]] != 0]
+    if not len(adds) and not len(removes):
+        return None
+    flips = np.concatenate([adds, removes], axis=0)
+    vals = np.concatenate([np.ones(len(adds), np.float32),
+                           np.zeros(len(removes), np.float32)])
+    new_adj = adj.copy()
+    new_adj[flips[:, 0], flips[:, 1]] = vals
+    new_adj[flips[:, 1], flips[:, 0]] = vals
+    touched = np.unique(flips)
+
+    # renorm the touched rows/cols with gcn_norm_adjacency's EXACT
+    # expression — same forced diagonal, same 1e-12 clamp, same
+    # left-associated products — so patched entries match a rebuild's bits
+    awl = new_adj.copy()
+    idx = np.arange(num_nodes)
+    awl[idx, idx] = 1.0
+    deg = awl.sum(axis=1)
+    with np.errstate(divide="ignore"):
+        dis = np.where(deg > 0, 1.0 / np.sqrt(np.maximum(deg, 1e-12)), 0.0)
+    na = norm_adj.copy()
+    na[touched, :] = dis[touched][:, None] * awl[touched, :] * dis[None, :]
+    na[:, touched] = dis[:, None] * awl[:, touched] * dis[touched][None, :]
+    return EdgeDelta(adj=new_adj, norm_adj=na, dis=dis.astype(np.float32),
+                     flip_i=flips[:, 0].astype(np.int32),
+                     flip_j=flips[:, 1].astype(np.int32),
+                     flip_v=vals,
+                     touched=touched.astype(np.int32))
+
+
+def edge_index_from_adjacency(adj: np.ndarray, num_nodes: int) -> np.ndarray:
+    """Recover the (2, E) edge list from a dense adjacency (A[dst, src]=1)
+    — the full-rebuild fallback's input when only the patched adjacency is
+    on hand."""
+    dst, src = np.nonzero(adj[:num_nodes, :num_nodes])
+    return np.stack([src, dst]).astype(np.int32)
+
+
 def update_edges(pg: PaddedGraph, edge_index: np.ndarray, num_nodes: int,
                  *, norm: str = "gcn") -> PaddedGraph:
     """GrAd: rebuild only the runtime mask inputs for an evolved graph.

@@ -551,6 +551,122 @@ def build_agg_quantizer() -> AggQuantizer:
     return q
 
 
+# ---------------------------------------------------------------------------
+# GrAd edge-delta patching (DESIGN.md §13): device-side incremental update
+# of the cached operand forms — scatter the flipped awl entries, renorm the
+# touched rows/cols of Â with the host-recomputed D^-1/2, re-quantize only
+# the rows whose fp32 values changed. Every arithmetic expression below
+# copies `materialize_operands` / `quantize_rowwise` operand-for-operand, so
+# a patched entry is BIT-IDENTICAL to a fresh rebuild of the new structure
+# version — the differential property suite holds it to that.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeltaSpec:
+    """Device-side description of one symmetric edge delta.
+
+    Static padding keeps the trace count bounded: `flip_*` and `touched`
+    are padded to engine-configured widths by REPEATING their first entry —
+    the scatters then write identical values at duplicate indices, which is
+    deterministic, and the row renorms recompute a row to the same bits
+    twice. `dis` is the FULL patched D^-1/2 vector, computed host-side with
+    the exact `gcn_norm_adjacency` expression (a few cap·4 bytes on the
+    wire — the dense Â itself never crosses).
+    """
+    flip_i: jnp.ndarray            # (K_e,) int32 flip endpoints (symmetric:
+    flip_j: jnp.ndarray            # (K_e,) int32  both (i,j) and (j,i) write)
+    flip_v: jnp.ndarray            # (K_e,) float32 new awl value (1=add 0=rm)
+    touched: jnp.ndarray           # (K_t,) int32 nodes with changed rows/cols
+    dis: jnp.ndarray               # (cap,) float32 patched D^-1/2
+    fields: Tuple[str, ...] = ()   # static: which operand fields to patch
+
+
+jax.tree_util.register_pytree_node(
+    DeltaSpec,
+    lambda d: ((d.flip_i, d.flip_j, d.flip_v, d.touched, d.dis), d.fields),
+    lambda fields, c: DeltaSpec(*c, fields=fields))
+
+
+def patch_operands(ops: GranniteOperands, d: DeltaSpec) -> GranniteOperands:
+    """Patch one graph's cached dense operands in place of a rebuild.
+
+    GCN: awl is recovered exactly from the cached Â (an entry is non-zero
+    iff awl=1 — real rows have dis>0, padded rows are all zero), the flips
+    scattered in, and only the touched rows/cols renormalized with the same
+    left-associated `dis[:, None] * awl * dis[None, :]` products the
+    materializer uses — untouched entries keep their bits, touched ones
+    get the bits a full rebuild would produce. GAT: the mask IS awl, so the
+    flips scatter straight in and the bias re-derives from it. Pure jnp.
+    """
+    if "norm_adj" in d.fields:
+        na = ops.norm_adj
+        awl = (na != 0).astype(jnp.float32)
+        awl = awl.at[d.flip_i, d.flip_j].set(d.flip_v)
+        awl = awl.at[d.flip_j, d.flip_i].set(d.flip_v)
+        rows = d.dis[d.touched][:, None] * awl[d.touched, :] * d.dis[None, :]
+        na = na.at[d.touched, :].set(rows)
+        cols = d.dis[:, None] * awl[:, d.touched] * d.dis[d.touched][None, :]
+        na = na.at[:, d.touched].set(cols)
+        ops = dataclasses.replace(ops, norm_adj=na)
+    if "mask_mult" in d.fields:
+        m = ops.mask_mult
+        m = m.at[d.flip_i, d.flip_j].set(d.flip_v)
+        m = m.at[d.flip_j, d.flip_i].set(d.flip_v)
+        bias = jnp.where(m > 0, 0.0, masks.NEG_INF).astype(jnp.float32)
+        ops = dataclasses.replace(ops, mask_mult=m, bias_add=bias)
+    return ops
+
+
+def patch_tier_operands(tops: TierOperands, norm_adj: jnp.ndarray,
+                        touched: jnp.ndarray) -> TierOperands:
+    """Re-quantize ONLY the touched rows of the cached int8 Â from the
+    patched fp32 Â. `quantize_rowwise` is row-local (per-row absmax), so
+    quantizing a gathered row block is bit-identical to the same rows of a
+    full `derive_tier_operands` — the whole-matrix requant stays the
+    fallback when the changed-row set exceeds the pad width."""
+    from .quant import quantize_rowwise
+    aq, a_scale = quantize_rowwise(norm_adj[touched, :])
+    return TierOperands(
+        agg_aq=tops.agg_aq.at[touched].set(aq),
+        agg_a_scale=tops.agg_a_scale.at[touched].set(a_scale))
+
+
+@dataclasses.dataclass
+class DeltaPatcher:
+    """The jitted GrAd delta patchers, with the same trace accounting as
+    ExecutionPlan / OperandMaterializer / AggQuantizer: `fn` specializes
+    per (capacity, fieldset, pad widths), `tier_fn` per (capacity, requant
+    width) — GraphServe warms both per bucket in `warmup()` and folds the
+    count into the zero-recompile contract."""
+    fn: Callable = dataclasses.field(default=None, repr=False)
+    tier_fn: Callable = dataclasses.field(default=None, repr=False)
+    trace_count: int = 0
+
+    def __call__(self, ops: GranniteOperands, d: DeltaSpec
+                 ) -> GranniteOperands:
+        return self.fn(ops, d)
+
+    def patch_tier(self, tops: TierOperands, norm_adj: jnp.ndarray,
+                   touched: jnp.ndarray) -> TierOperands:
+        return self.tier_fn(tops, norm_adj, touched)
+
+
+def build_delta_patcher() -> DeltaPatcher:
+    p = DeltaPatcher()
+
+    def _patch(ops, d):
+        p.trace_count += 1                # python side effect: traces only
+        return patch_operands(ops, d)
+
+    def _tier(tops, norm_adj, touched):
+        p.trace_count += 1                # python side effect: traces only
+        return patch_tier_operands(tops, norm_adj, touched)
+
+    p.fn = jax.jit(_patch)
+    p.tier_fn = jax.jit(_tier)
+    return p
+
+
 @dataclasses.dataclass
 class BlockCompactor:
     """The jitted GraSp structure deriver (DESIGN.md §10), with the same

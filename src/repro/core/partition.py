@@ -248,6 +248,24 @@ def partition_graph(edge_index: np.ndarray, num_nodes: int, shards: int,
                        halo=halo, loads=loads, cut_edges=int(cross.sum()))
 
 
+def patch_halo(part: GraphShards, edge_index: np.ndarray) -> GraphShards:
+    """GrAd delta on a partitioned graph (DESIGN.md §13): recompute the
+    per-shard halo sets and the cut-edge count for an evolved edge list
+    while KEEPING the node assignment and slot permutation. Edge-only
+    deltas never move a node between shards — re-partitioning would (the
+    greedy cut depends on the edges), which is exactly why the delta path
+    must not: a fresh partition permutes the operand layout and the
+    serving engine would owe a full slice rebuild. Same vectorized halo
+    construction as `partition_graph`, O(E) host work."""
+    src, dst = edge_index
+    live = (src < part.num_nodes) & (dst < part.num_nodes)
+    ls, ld = src[live], dst[live]
+    cross = part.assignment[ls] != part.assignment[ld]
+    halo = tuple(np.unique(ls[cross & (part.assignment[ld] == s)])
+                 for s in range(part.shards))
+    return dataclasses.replace(part, halo=halo, cut_edges=int(cross.sum()))
+
+
 def partition_for_ladder(edge_index: np.ndarray, num_nodes: int, ladder,
                          shard_counts: Sequence[int]) -> GraphShards:
     """Bucket-aware shard-count selection: the smallest configured shard
@@ -287,10 +305,11 @@ def modelled_sharded_latency(part: GraphShards, *, in_feats: int, hidden: int,
     compute = flops / MXU
     if part.shards == 1:
         return compute
+    from repro.dist.compress import ring_psum_nbytes
     bytes_per_elt = 1 if compress else 4
     wire = 0.0
     for w in exchange_widths:
-        # ring psum moves ~2(S-1)/S of the buffer per participant
-        nbytes = 2 * (part.shards - 1) / part.shards * full * w * bytes_per_elt
+        nbytes = ring_psum_nbytes(part.shards, full * w,
+                                  bytes_per_elt=bytes_per_elt)
         wire += COLLECTIVE_LATENCY_S + nbytes / DEVICE_LINK_BYTES_PER_S
     return compute + wire

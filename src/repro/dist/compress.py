@@ -19,6 +19,20 @@ INT8_MAX = 127.0
 AxisNames = Union[str, Tuple[str, ...]]
 
 
+def ring_psum_nbytes(shards: int, elems: float, *,
+                     bytes_per_elt: float) -> float:
+    """Bytes ONE participant moves in a ring all-reduce over `elems`
+    elements: ~2(S-1)/S of the buffer (reduce-scatter + all-gather). The
+    single owner of that factor — both the serving engine's collective-byte
+    metrics (`GraphServe._halo_bytes`) and the sharded latency model
+    (`core.partition.modelled_sharded_latency`) price the wire through
+    here, so the accounting cannot drift from the model. A 1-shard ring
+    moves nothing — there is nobody to exchange with."""
+    if shards <= 1:
+        return 0.0
+    return 2.0 * (shards - 1) / shards * elems * bytes_per_elt
+
+
 def exact_psum_mean(g: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
     n = jax.lax.psum(jnp.ones((), g.dtype), axis_names)
     return jax.lax.psum(g, axis_names) / n

@@ -91,15 +91,36 @@ Engine contracts (what tests and operators may rely on):
     block structure at the bucket budget — plus one CacheG materializer
     trace per (bucket, operand-fieldset) and two block-compactor traces
     (counts reduction + full gather) per grasp-capable bucket.
-  * Cache keys — all three operand caches are keyed by (graph_id,
-    structure_version) and NOTHING else. The primary cache holds the
-    tier- and backend-agnostic fp32 operands every request shares; the
-    tier and grasp caches hold forms DERIVED from that same version
-    (GCN's int8 Â, quantized once per version so the int8 plan reads
-    1-byte rows instead of re-quantizing 4-byte fp32 every query; the
-    budget-padded block structure plus the backend decision, compacted
-    once per version). `update()` bumping the version is the only
-    invalidation path for all three.
+  * Cache keys — all four operand caches (fp32 operands, sharded slices,
+    int8 Â, grasp structure) are keyed by (graph_id, structure_version)
+    and NOTHING else. The primary caches hold the tier- and
+    backend-agnostic forms every request shares; the tier and grasp
+    caches hold forms DERIVED from that same version (GCN's int8 Â,
+    quantized once per version so the int8 plan reads 1-byte rows instead
+    of re-quantizing 4-byte fp32 every query; the budget-padded block
+    structure plus the backend decision, compacted once per version).
+    `update()`/`update_delta()` bumping the version (or `detach()`) is
+    the only INVALIDATION path for all four — and capacity eviction
+    (below) is not invalidation: an evicted entry's key is still live and
+    the next query rebuilds or re-materializes the identical value.
+  * Bounded residency (DESIGN.md §13) — with `device_cache_budget_bytes`
+    set, all four caches live under one byte-budgeted manager
+    (`runtime/cache.py`): every entry carries its measured device cost,
+    cost-aware LRU eviction keeps `cache_resident_bytes <= budget` at
+    every step (derived forms evict before the primary they hang off),
+    evicted primaries spill to a host-RAM compact form re-materialized on
+    fault (`cache_spill_hits` — compact bytes cross the link again, zero
+    host packing), and `attach()` becomes the admission gate
+    (`CacheAdmissionError`, policy `admission="evict"|"reject"`).
+    Eviction, spill, and re-materialization never trace: the materializer
+    and patcher blobs are bucket-shaped and warm.
+  * GrAd deltas (§13) — `update_delta(gid, add_edges, remove_edges)`
+    patches the packed adjacency host-side and every device-resident
+    cached form IN PLACE of a rebuild (touched-row Â renorm, GAT
+    mask/bias rescatter, touched-row int8 re-quantization, grasp
+    re-derivation, sharded row blocks with the partition kept), bit-exact
+    against a full rebuild; deltas past the warmed pad widths (or SAGE)
+    fall back to `update()` — `delta_updates` vs `delta_fallbacks`.
   * Plan identity — plans are keyed by (cfg, bucket, batch, Techniques,
     backend, fusion): tenants sharing a config share blobs, and tier names
     that alias the same Techniques (GCN int8 vs int8+grax) share too. Tier
@@ -125,13 +146,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import (BucketLadder, Graph, PaddedGraph, pad_graph,
-                              stack_padded)
+from repro.core.graph import (BucketLadder, Graph, PaddedGraph,
+                              apply_edge_delta, edge_index_from_adjacency,
+                              is_symmetric_adjacency, pad_graph, stack_padded)
 from repro.core.layers import Techniques
-from repro.core.models import (FUSION_MODES, OPERAND_FIELDS, ExecutionPlan,
-                               GNNConfig, GranniteOperands, PlanKey,
-                               ShardSlice, TierOperands, build_agg_quantizer,
-                               build_block_compactor, build_materializer,
+from repro.core.models import (FUSION_MODES, OPERAND_FIELDS, DeltaSpec,
+                               ExecutionPlan, GNNConfig, GranniteOperands,
+                               PlanKey, ShardSlice, TierOperands,
+                               build_agg_quantizer, build_block_compactor,
+                               build_delta_patcher, build_materializer,
                                build_operands, build_plan,
                                build_sharded_operands, build_sharded_plan,
                                calibrate_tier, compact_operands,
@@ -140,8 +163,13 @@ from repro.core.models import (FUSION_MODES, OPERAND_FIELDS, ExecutionPlan,
                                realize_operands, sharded_exchange_widths,
                                stack_operands, stack_shard_slices,
                                stack_tier_operands, unshard_logits)
-from repro.core.partition import GraphShards, partition_for_ladder
+from repro.core.partition import (GraphShards, partition_for_ladder,
+                                  patch_halo, transfer_cost)
 from repro.core.sparsity import block_stats, grasp_max_nnz, select_agg_backend
+from repro.dist.compress import ring_psum_nbytes
+from repro.runtime.cache import (CacheAdmissionError, DeviceCacheManager,
+                                 estimate_dense_entry_bytes,
+                                 estimate_shard_entry_bytes, pytree_nbytes)
 
 # Per-kind serving techniques for models registered WITHOUT a tier ladder.
 # GraSp is deliberately NOT a technique flag here: block-sparse aggregation
@@ -283,6 +311,17 @@ class GraphServeConfig:
     # (oversized graphs raise, exactly the pre-§12 behavior)
     halo_compress: bool = True             # int8 QuantGr on the halo wire;
     # False exchanges exact fp32 (4x the collective bytes)
+    device_cache_budget_bytes: Optional[int] = None   # §13: byte budget the
+    # four operand caches share; None keeps them unbounded (pre-§13)
+    spill_to_host: bool = True             # §13: evicted primaries keep a
+    # host-RAM compact form, re-materialized on fault; False drops them
+    admission: str = "evict"               # §13 attach() policy when a new
+    # graph's projected operands overflow the budget: "evict" admits and
+    # lets insert-time eviction make room, "reject" raises
+    delta_pad_rows: int = 64               # §13 GrAd delta threshold: max
+    # touched nodes update_delta() patches device-side (flip scatters pad
+    # to 2x this); bigger deltas — and 0, disabling the path — take the
+    # full update() rebuild
 
 
 @dataclasses.dataclass
@@ -316,25 +355,25 @@ class GraphServe:
         self._materializer = build_materializer()
         self._agg_quantizer = build_agg_quantizer()
         self._block_compactor = build_block_compactor()
-        # CacheG device-resident operand cache: (graph_id, structure_version)
-        # -> materialized GranniteOperands living in device memory. update()
-        # bumps the version and evicts, so stale structure can never serve.
-        # The tier cache holds DERIVED forms of the same version (GCN's int8
-        # Â) under the same key — same lifecycle, same invalidation — and
-        # the grasp cache holds the third derived form: the resolved agg
-        # backend plus (when "grasp") the budget-padded block structure,
-        # compacted device-side from the cached fp32 Â (DESIGN.md §10).
-        self._operand_cache: Dict[Tuple[int, int], GranniteOperands] = {}
-        self._tier_operand_cache: Dict[Tuple[int, int], TierOperands] = {}
-        self._grasp_cache: Dict[Tuple[int, int], Tuple[str, object]] = {}
+        self._delta_patcher = build_delta_patcher()
+        if self.sc.admission not in ("evict", "reject"):
+            raise ValueError(f"unknown admission policy "
+                             f"{self.sc.admission!r}; pick evict|reject")
+        # CacheG device-resident operand hierarchy, keyed by (graph_id,
+        # structure_version) and NOTHING else: the primary fp32 operands
+        # ("operand"), the DERIVED forms of the same version — GCN's int8 Â
+        # ("tier") and the resolved agg backend plus budget-padded block
+        # structure ("grasp", DESIGN.md §10) — and the sharded slice tuple
+        # ("shard", §12). Since §13 all four live under one byte-budgeted
+        # manager (`runtime/cache.py`): cost-aware LRU eviction against
+        # `device_cache_budget_bytes`, evicted primaries spilling to a
+        # host-RAM compact form, update()/detach() invalidating by key.
+        self._cache = DeviceCacheManager(
+            budget_bytes=self.sc.device_cache_budget_bytes,
+            spill_to_host=self.sc.spill_to_host)
         # sharded registry (§12): graph_id -> (partition, source Graph) for
-        # graphs attach() auto-sharded past the top ladder bucket; the shard
-        # cache is their CacheG — the per-shard ShardSlices (one device-
-        # resident operand row block per shard) under the SAME
-        # (graph_id, structure_version) lifecycle as the other three caches
+        # graphs attach() auto-sharded past the top ladder bucket
         self._sharded: Dict[int, Tuple[GraphShards, Graph]] = {}
-        self._shard_cache: Dict[Tuple[int, int],
-                                Tuple[ShardSlice, ...]] = {}
         self._graph_version: Dict[int, int] = {}
         self._warm_blobs: Optional[int] = None
         self._uid = 0
@@ -357,11 +396,75 @@ class GraphServe:
                         "grasp_batches": 0, "sharded_batches": 0,
                         "halo_bytes_exchanged": 0,
                         "collective_bytes_compressed": 0,
-                        "collective_bytes_exact": 0}
+                        "collective_bytes_exact": 0,
+                        "cache_spill_hits": 0, "cache_admission_rejects": 0,
+                        "delta_updates": 0, "delta_fallbacks": 0}
 
     def _count(self, name: str, delta=1) -> None:
         with self._lock:
             self.metrics[name] += delta
+
+    # ----------------------------------------------------- cache compat views
+    # (snapshot views of the §13 cache manager in the plain-dict shape the
+    # four caches had before it — tests and diagnostics read these)
+    @property
+    def _operand_cache(self) -> Dict[Tuple[int, int], GranniteOperands]:
+        return self._cache.view("operand")
+
+    @property
+    def _tier_operand_cache(self) -> Dict[Tuple[int, int], TierOperands]:
+        return self._cache.view("tier")
+
+    @property
+    def _grasp_cache(self) -> Dict[Tuple[int, int], Tuple[str, object]]:
+        return self._cache.view("grasp")
+
+    @property
+    def _shard_cache(self) -> Dict[Tuple[int, int], Tuple[ShardSlice, ...]]:
+        return self._cache.view("shard")
+
+    # ------------------------------------------------------- cache cost model
+    def _projected_primary_bytes(self, model: str, pg: PaddedGraph,
+                                 part: Optional[GraphShards]) -> int:
+        """Projected device cost of the PRIMARY entry this graph pins on
+        first query — what attach() admission control (§13) sizes against.
+        Derived forms (int8 Â, grasp structure) are not counted: they rank
+        below the primary in eviction order and never exceed it."""
+        cfg = self.models[model].cfg
+        nf = len(OPERAND_FIELDS[cfg.kind])
+        if part is not None:
+            return estimate_shard_entry_bytes(part.shards, part.shard_cap,
+                                              part.full_rows, nf,
+                                              cfg.in_feats)
+        return estimate_dense_entry_bytes(nf, pg.capacity)
+
+    @staticmethod
+    def _shard_entry_nbytes(slices: Tuple[ShardSlice, ...]) -> int:
+        """Measured device bytes of a sharded slice-tuple entry (ShardSlice
+        is a plain dataclass, not a pytree — sum its array members)."""
+        return sum(pytree_nbytes((s.x, s.ops, s.node_mask)) for s in slices)
+
+    def _operand_spill_fn(self, graph_id: int, ver: int, model: str):
+        """Eviction-time producer of the §13 host-RAM spill form: re-packs
+        the CacheG compact `HostOperands` from the graph's CURRENT host
+        snapshot (SymG bit-packed, ~64x smaller than the dense fp32 entry;
+        SAGE re-samples under the same seeded default rng, so the packed
+        mask reproduces the evicted operands bit-for-bit). Called by the
+        manager under the engine `_lock`. Declines — the entry is dropped
+        and the next miss runs the full build — when the version moved on,
+        the graph detached or went sharded, or the pack fell back to the
+        eager dense form (directed structure: nothing compact to keep)."""
+        def _spill():
+            if (self._graph_version.get(graph_id) != ver
+                    or graph_id in self._sharded):
+                return None
+            entry = self.graphs.get(graph_id)
+            if entry is None:
+                return None
+            ho = prepare_host_operands(entry[1], self.models[model].cfg,
+                                       use_cacheg=True)
+            return None if ho.fallback else ho
+        return _spill
 
     # ------------------------------------------------------------------ setup
     def register_model(self, name: str, cfg: GNNConfig, params: Optional[Dict] = None,
@@ -472,11 +575,15 @@ class GraphServe:
         per bucket × operand-fieldset) + the tier-operand deriver (one per
         bucket with a QuantGr GCN tier) + the GraSp block compactor (two
         per bucket with a grasp-capable model — the counts reduction and
-        the full gather), all compiled during warmup."""
+        the full gather) + the GrAd delta patcher (one per bucket ×
+        GCN/GAT fieldset, plus one row-requant trace per bucket with a
+        QuantGr GCN tier, when `delta_pad_rows > 0`), all compiled during
+        warmup."""
         return (sum(p.trace_count for p in self._plans.values())
                 + self._materializer.trace_count
                 + self._agg_quantizer.trace_count
-                + self._block_compactor.trace_count)
+                + self._block_compactor.trace_count
+                + self._delta_patcher.trace_count)
 
     def warmup(self, *, buckets: Optional[Tuple[int, ...]] = None) -> int:
         """Compile every (model, bucket, tier, backend, fusion) plan — and,
@@ -570,6 +677,7 @@ class GraphServe:
                                        else ops,
                                        quant, tops)
                             out.block_until_ready()
+                self._warm_delta(e, bucket, single, warmed)
         for shards in sorted({int(s) for s in self.sc.shard_counts
                               if int(s) >= 2}):
             for bucket in buckets:
@@ -605,8 +713,61 @@ class GraphServe:
                         out = plan(e.params, x, ops, quant,
                                    node_mask=mask)
                         out.block_until_ready()
+                    if (self.sc.delta_pad_rows > 0
+                            and e.cfg.kind in ("gcn", "gat")):
+                        # sharded delta patch runs over the CONCATENATED
+                        # (full, full) permuted operand matrices (§13) —
+                        # one extra patcher trace per (full rows, fieldset)
+                        fields = OPERAND_FIELDS[e.cfg.kind]
+                        if ("delta", full, fields) not in warmed:
+                            warmed.add(("delta", full, fields))
+                            hole1 = jnp.zeros((1, 1), jnp.float32)
+                            fmat = jnp.zeros((full, full), jnp.float32)
+                            ph = GranniteOperands(**{
+                                f: (fmat if f in kind_fields else hole1)
+                                for f in ("norm_adj", "mask_mult",
+                                          "bias_add", "sample_mask",
+                                          "mean_mask")})
+                            self._delta_patcher(
+                                ph, self._placeholder_delta(full, fields))
         self._warm_blobs = self.compiled_blobs
         return self._warm_blobs
+
+    def _delta_pads(self, cap: int) -> Tuple[int, int]:
+        """(touched, flip) static pad widths of the delta patcher at one
+        capacity — the §13 delta-vs-rebuild threshold in shape form."""
+        kt = min(self.sc.delta_pad_rows, cap)
+        return kt, 2 * kt
+
+    def _placeholder_delta(self, cap: int, fields: Tuple[str, ...]
+                           ) -> DeltaSpec:
+        kt, ke = self._delta_pads(cap)
+        return DeltaSpec(flip_i=jnp.zeros((ke,), jnp.int32),
+                         flip_j=jnp.zeros((ke,), jnp.int32),
+                         flip_v=jnp.zeros((ke,), jnp.float32),
+                         touched=jnp.zeros((kt,), jnp.int32),
+                         dis=jnp.zeros((cap,), jnp.float32), fields=fields)
+
+    def _warm_delta(self, e: _ModelEntry, bucket: int,
+                    single: GranniteOperands, warmed: set) -> None:
+        """Warm the GrAd delta patcher for one (bucket, model): the operand
+        patch trace per fieldset, plus the tier row-requant trace when a
+        QuantGr GCN tier will keep a derived int8 Â to patch."""
+        if (self.sc.delta_pad_rows <= 0 or not self.sc.use_cacheg
+                or e.cfg.kind not in ("gcn", "gat")):
+            return
+        fields = OPERAND_FIELDS[e.cfg.kind]
+        if ("delta", bucket, fields) not in warmed:
+            warmed.add(("delta", bucket, fields))
+            self._delta_patcher(single,
+                                self._placeholder_delta(bucket, fields))
+        if (any(self._needs_tier_ops(e, tn) for tn in e.tiers)
+                and ("delta_tier", bucket) not in warmed):
+            warmed.add(("delta_tier", bucket))
+            self._delta_patcher.patch_tier(
+                self._agg_quantizer(single.norm_adj), single.norm_adj,
+                jnp.zeros((min(2 * self.sc.delta_pad_rows, bucket),),
+                          jnp.int32))
 
     def assert_warm(self) -> None:
         """The zero-recompile contract (mirrors the LM server's assertion)."""
@@ -883,7 +1044,14 @@ class GraphServe:
         smallest configured shard count whose balanced per-shard load
         admits into the ladder, and every query over this graph_id
         dispatches through the sharded plan. Without `shard_counts` the
-        oversized graph raises, exactly as before."""
+        oversized graph raises, exactly as before.
+
+        With `device_cache_budget_bytes` set, attach() is the admission
+        gate (§13): a graph whose projected primary operand entry can
+        NEVER fit the budget raises `CacheAdmissionError` outright; under
+        `admission="reject"` one that would overflow the CURRENT residency
+        raises too, while the default `admission="evict"` admits it and
+        lets insert-time eviction make room on first query."""
         part = None
         try:
             pg = self.sc.ladder.pad(g)
@@ -894,6 +1062,22 @@ class GraphServe:
                                         self.sc.ladder,
                                         self.sc.shard_counts)
             pg = pad_graph(g, capacity=part.full_rows)
+        if self.sc.device_cache_budget_bytes is not None:
+            projected = self._projected_primary_bytes(model, pg, part)
+            with self._lock:
+                reject = (not self._cache.fits(projected)
+                          or (self.sc.admission == "reject"
+                              and self._cache.would_overflow(projected)))
+                if reject:
+                    self.metrics["cache_admission_rejects"] += 1
+            if reject:
+                raise CacheAdmissionError(
+                    f"graph with projected primary operand entry of "
+                    f"{projected} bytes cannot be admitted under "
+                    f"device_cache_budget_bytes="
+                    f"{self.sc.device_cache_budget_bytes} "
+                    f"(policy {self.sc.admission!r}, "
+                    f"{self._cache.resident_bytes} resident)")
         if calibrate:
             self._calibrate(model, pg)      # no-op once (model, tier) is done
         with self._lock:
@@ -910,17 +1094,17 @@ class GraphServe:
 
         The cache pins O(cap²) float32 per attached graph in device memory
         (~32 MB for GAT at cap=2048), plus O(cap²) int8 per graph that took
-        a QuantGr GCN tier — long-running multi-tenant servers must detach
-        graphs they stop serving, or the cache grows without bound (there
-        is deliberately no silent LRU: evicting a live tenant's operands
-        would turn its next query into a surprise re-materialize).
+        a QuantGr GCN tier. Without a `device_cache_budget_bytes` the
+        manager never evicts, so long-running unbudgeted multi-tenant
+        servers must detach graphs they stop serving; WITH a budget (§13)
+        cost-aware LRU eviction bounds residency instead, and detach is
+        how a tenant's spilled host-RAM form is released too. Lifecycle
+        removal is not an eviction: detaching touches no eviction/spill
+        counter.
         """
         with self._lock:
             key = (graph_id, self._graph_version.pop(graph_id, -1))
-            self._operand_cache.pop(key, None)
-            self._tier_operand_cache.pop(key, None)
-            self._grasp_cache.pop(key, None)
-            self._shard_cache.pop(key, None)
+            self._cache.invalidate(key)
             self._sharded.pop(graph_id, None)
             self.graphs.pop(graph_id, None)
 
@@ -991,10 +1175,10 @@ class GraphServe:
         with self._lock:
             self.graphs[graph_id] = (model, pg)
             ver = self._graph_version[graph_id]
-            self._operand_cache.pop((graph_id, ver), None)
-            self._tier_operand_cache.pop((graph_id, ver), None)
-            self._grasp_cache.pop((graph_id, ver), None)
-            self._shard_cache.pop((graph_id, ver), None)
+            # lifecycle invalidation, not eviction: a no-op on keys the
+            # graph never populated (attach-then-update before any query),
+            # and never counted in the §13 eviction/spill metrics
+            self._cache.invalidate((graph_id, ver))
             if new_sharded is not None:
                 self._sharded[graph_id] = new_sharded
             else:
@@ -1003,6 +1187,215 @@ class GraphServe:
             if rebucketed:
                 self.metrics["rebucket_events"] += 1
         return rebucketed
+
+    # ---------------------------------------------------- GrAd delta updates
+    def _delta_spec(self, cap: int, fields: Tuple[str, ...], flip_i, flip_j,
+                    flip_v, touched, dis) -> DeltaSpec:
+        """Pad one host-computed edge delta to the engine's static patcher
+        widths (§13): flips to K_e, touched rows to K_t, both by REPEATING
+        the first entry — duplicate-index scatters write identical values
+        and duplicate row renorms recompute the same bits, so the pads are
+        numerically inert and the trace count stays bounded."""
+        kt, ke = self._delta_pads(cap)
+
+        def _pad(a, k, dtype):
+            out = np.full((k,), a[0], dtype=dtype)
+            out[:len(a)] = a
+            return jnp.asarray(out)
+
+        return DeltaSpec(flip_i=_pad(flip_i, ke, np.int32),
+                         flip_j=_pad(flip_j, ke, np.int32),
+                         flip_v=_pad(flip_v, ke, np.float32),
+                         touched=_pad(touched, kt, np.int32),
+                         dis=jnp.asarray(dis.astype(np.float32)),
+                         fields=fields)
+
+    def _requant_rows(self, delta, cap: int):
+        """Rows of the int8 Â a delta forces through re-quantization:
+        touched rows themselves plus every row adjacent (new structure) to
+        a touched node — their entries rescale with the touched dis even
+        though their own degree is unchanged. Returns the padded row index
+        vector, or None when the set exceeds the warmed width K_r (the
+        caller re-quantizes the full matrix through the per-bucket
+        `_agg_quantizer` instead — also warm)."""
+        kr = min(2 * self.sc.delta_pad_rows, cap)
+        neigh = np.flatnonzero(delta.adj[:, delta.touched].any(axis=1))
+        rows = np.union1d(delta.touched, neigh).astype(np.int64)
+        if len(rows) > kr:
+            return None
+        out = np.full((kr,), rows[0], np.int32)
+        out[:len(rows)] = rows
+        return jnp.asarray(out)
+
+    def _patch_shard_slices(self, e: _ModelEntry, part: GraphShards,
+                            slices: Tuple[ShardSlice, ...], delta
+                            ) -> Tuple[ShardSlice, ...]:
+        """Device-patch a sharded slice tuple (§13): concatenate the shard
+        row blocks back into the (full, full) permuted operand matrices,
+        run the SAME warm patch trace in SLOT coordinates (flip/touched
+        indices through the inverse permutation, dis permuted), re-slice.
+        Features and node masks are untouched — an edge delta moves no
+        nodes and the partition is deliberately KEPT (a fresh partition
+        would reshuffle slots and force a full rebuild, defeating the
+        patch)."""
+        full, c = part.full_rows, part.shard_cap
+        invperm = np.empty((full,), np.int64)
+        invperm[part.perm] = np.arange(full)
+        fields = OPERAND_FIELDS[e.cfg.kind]
+        spec = self._delta_spec(full, fields,
+                                invperm[delta.flip_i].astype(np.int64),
+                                invperm[delta.flip_j].astype(np.int64),
+                                delta.flip_v,
+                                np.sort(invperm[delta.touched]),
+                                delta.dis[part.perm])
+        hole = jnp.zeros((1, 1), jnp.float32)
+        cat = {f: jnp.concatenate([getattr(s.ops, f) for s in slices],
+                                  axis=0) for f in fields}
+        full_ops = GranniteOperands(**{
+            f: cat.get(f, hole) for f in ("norm_adj", "mask_mult",
+                                          "bias_add", "sample_mask",
+                                          "mean_mask")})
+        patched = self._delta_patcher(full_ops, spec)
+        out = []
+        for idx, s in enumerate(slices):
+            blk = {f: getattr(patched, f)[idx * c:(idx + 1) * c]
+                   for f in fields}
+            out.append(dataclasses.replace(
+                s, ops=dataclasses.replace(s.ops, **blk)))
+        return tuple(out)
+
+    def update_delta(self, graph_id: int, add_edges=None,
+                     remove_edges=None) -> bool:
+        """GrAd INCREMENTAL structure update (§13): patch, don't rebuild.
+
+        `add_edges` / `remove_edges` are (k, 2) arrays of UNDIRECTED node
+        pairs (directed graphs raise — take the full `update()` path).
+        The host patches the packed adjacency and renormalizes only the
+        touched rows/cols of Â (`core.graph.apply_edge_delta`); every
+        device-resident cached form of the graph is then patched IN PLACE
+        of a rebuild through the warm `DeltaPatcher` traces — fp32 Â
+        row/col renorm, GAT mask/bias rescatter, int8 Â re-quantization of
+        exactly the rows whose fp32 values changed, grasp block-list
+        re-derivation from the patched Â, and on sharded graphs the
+        concatenated permuted row blocks with the partition (and halo
+        observability via `core.partition.patch_halo`) carried forward.
+        The patched entries land under the NEW (graph_id, version+1) key —
+        cached arrays are never mutated, so a request racing this update
+        serves its snapshot unharmed, and the per-key lifecycle contract
+        holds unchanged.
+
+        Falls back to the full `update()` rebuild — counted in
+        `delta_fallbacks` — when the delta exceeds the warmed patch widths
+        (more than `delta_pad_rows` touched nodes or 2x that many edge
+        flips), the kind is SAGE (its sampled mask is not incrementally
+        patchable), or `delta_pad_rows=0` disabled patching. Ineffective
+        deltas (all edges already present/absent) return True without
+        bumping the version: every cache entry is still exact.
+
+        Returns True when the structure was patched incrementally (or the
+        delta was a no-op), False when it fell back to `update()`.
+        """
+        with self._lock:
+            model, pg = self.graphs[graph_id]
+            ver = self._graph_version[graph_id]
+            sharded = self._sharded.get(graph_id)
+        e = self.models[model]
+        if not is_symmetric_adjacency(pg.adj):
+            raise ValueError(
+                "update_delta edits undirected edge pairs; directed "
+                "graphs must take the full update() path")
+        delta = apply_edge_delta(pg.adj, pg.norm_adj, pg.num_nodes,
+                                 add_edges, remove_edges)
+        if delta is None:
+            return True          # nothing effective changed: caches stand
+        kt, ke = self._delta_pads(pg.capacity)
+        patchable = (self.sc.delta_pad_rows > 0
+                     and e.cfg.kind in ("gcn", "gat")
+                     and len(delta.touched) <= kt
+                     and len(delta.flip_i) <= ke)
+        if not patchable:
+            # §13 delta-vs-rebuild threshold: past the warmed patch widths
+            # (or for SAGE's sampled mask) a rebuild is both simpler and
+            # cheaper than a cascade of patches — reuse update() verbatim
+            self._count("delta_fallbacks")
+            edge_index = edge_index_from_adjacency(delta.adj, pg.num_nodes)
+            feats = (sharded[1].features if sharded is not None
+                     else pg.features[:pg.num_nodes])
+            self.update(graph_id, edge_index, pg.num_nodes, feats)
+            return False
+        pg2 = dataclasses.replace(pg, adj=delta.adj, norm_adj=delta.norm_adj)
+        old_key, new_key = (graph_id, ver), (graph_id, ver + 1)
+        if sharded is not None:
+            part, g = sharded
+            edge_index = edge_index_from_adjacency(delta.adj, pg.num_nodes)
+            g2 = dataclasses.replace(g, edge_index=edge_index)
+            part2 = patch_halo(part, edge_index)
+            with self._lock:
+                slices = self._cache.get("shard", old_key)
+            new_slices = None
+            if slices is not None:
+                new_slices = self._patch_shard_slices(e, part, slices,
+                                                      delta)
+            with self._lock:
+                if self._graph_version.get(graph_id) != ver:
+                    return False          # a racing update/detach won
+                self.graphs[graph_id] = (model, pg2)
+                self._sharded[graph_id] = (part2, g2)
+                self._cache.invalidate(old_key)
+                self._graph_version[graph_id] = ver + 1
+                if new_slices is not None:
+                    self._cache.put(
+                        "shard", new_key, new_slices,
+                        nbytes=self._shard_entry_nbytes(new_slices),
+                        remat_s=transfer_cost(
+                            self._shard_entry_nbytes(new_slices)))
+                self.metrics["delta_updates"] += 1
+            return True
+        with self._lock:
+            ops_old = self._cache.get("operand", old_key)
+            tops_old = self._cache.get("tier", old_key)
+            had_grasp = self._cache.get("grasp", old_key) is not None
+        new_ops = new_tops = new_grasp = None
+        if self.sc.use_cacheg and ops_old is not None:
+            fields = OPERAND_FIELDS[e.cfg.kind]
+            spec = self._delta_spec(pg.capacity, fields, delta.flip_i,
+                                    delta.flip_j, delta.flip_v,
+                                    delta.touched, delta.dis)
+            new_ops = self._delta_patcher(ops_old, spec)
+            if tops_old is not None:
+                rows = self._requant_rows(delta, pg.capacity)
+                if rows is None:
+                    new_tops = self._agg_quantizer(new_ops.norm_adj)
+                else:
+                    new_tops = self._delta_patcher.patch_tier(
+                        tops_old, new_ops.norm_adj, rows)
+            if had_grasp and self._grasp_capable(e):
+                # the block structure cannot be patched sparsely (a flip
+                # moves rows between blocks) but re-deriving from the
+                # PATCHED device Â is still zero host bytes and warm
+                new_grasp = self._derive_grasp(e, pg.capacity,
+                                               new_ops.norm_adj)
+        with self._lock:
+            if self._graph_version.get(graph_id) != ver:
+                return False              # a racing update/detach won
+            self.graphs[graph_id] = (model, pg2)
+            self._cache.invalidate(old_key)
+            self._graph_version[graph_id] = ver + 1
+            if new_ops is not None:
+                nb = pytree_nbytes(new_ops)
+                self._cache.put(
+                    "operand", new_key, new_ops, nbytes=nb,
+                    remat_s=transfer_cost(nb),
+                    spill_fn=self._operand_spill_fn(graph_id, ver + 1,
+                                                    model))
+            if new_tops is not None:
+                self._cache.put("tier", new_key, new_tops,
+                                nbytes=pytree_nbytes(new_tops))
+            if new_grasp is not None:
+                self._cache.put("grasp", new_key, new_grasp,
+                                nbytes=pytree_nbytes(new_grasp))
+            self.metrics["delta_updates"] += 1
+        return True
 
     def prepare_query(self, graph_id: int, *, tier: Optional[str] = None,
                       fusion: Optional[str] = None,
@@ -1052,13 +1445,29 @@ class GraphServe:
                                  submitted_s=submitted_s)
         key = (graph_id, ver)
         with self._lock:
-            ops = self._operand_cache.get(key)
+            ops = self._cache.get("operand", key)
         if ops is None:
-            self._count("operand_cache_misses")
-            ops = self._device_operands(model, pg)
+            with self._lock:
+                spilled = self._cache.spill_get("operand", key)
+            if spilled is not None:
+                # §13 spill fault: the evicted primary re-materializes from
+                # its host-RAM compact form — compact bytes cross the link
+                # again, but zero host packing work runs, and it is NOT an
+                # operand_cache_miss (this version's structure work is done)
+                self._count("cache_spill_hits")
+                self._count("operand_bytes_h2d", spilled.nbytes)
+                ops = realize_operands(spilled, self._materializer)
+            else:
+                self._count("operand_cache_misses")
+                ops = self._device_operands(model, pg)
+            nb = pytree_nbytes(ops)
             with self._lock:
                 if self._graph_version.get(graph_id) == ver:
-                    self._operand_cache[key] = ops
+                    self._cache.put(
+                        "operand", key, ops, nbytes=nb,
+                        remat_s=transfer_cost(nb),
+                        spill_fn=self._operand_spill_fn(graph_id, ver,
+                                                        model))
         else:
             self._count("operand_cache_hits")
         tops = None
@@ -1068,23 +1477,28 @@ class GraphServe:
             # derived-form hit path: the int8 Â is structure work too —
             # once per (graph, version), never per query
             with self._lock:
-                tops = self._tier_operand_cache.get(key)
+                tops = self._cache.get("tier", key)
             if tops is None:
                 tops = self._agg_quantizer(ops.norm_adj)
                 with self._lock:
+                    # a derived insert can never evict an entry at its own
+                    # key — the manager protects the inserted key, which is
+                    # exactly the primary this form hangs off
                     if self._graph_version.get(graph_id) == ver:
-                        self._tier_operand_cache[key] = tops
+                        self._cache.put("tier", key, tops,
+                                        nbytes=pytree_nbytes(tops))
         backend = "dense"
         if self._grasp_capable(e) and not e.tiers[resolved].quantgr:
             # derived-form hit path for the block structure: rule + compact
             # once per (graph, version) from the device-resident Â
             with self._lock:
-                cached = self._grasp_cache.get(key)
+                cached = self._cache.get("grasp", key)
             if cached is None:
                 cached = self._derive_grasp(e, pg.capacity, ops.norm_adj)
                 with self._lock:
                     if self._graph_version.get(graph_id) == ver:
-                        self._grasp_cache[key] = cached
+                        self._cache.put("grasp", key, cached,
+                                        nbytes=pytree_nbytes(cached))
             backend, bsp = cached
             self._count_forced_fallback(e, backend)   # per request, cached
             if backend == "grasp":                    # decision or not
@@ -1117,13 +1531,18 @@ class GraphServe:
         resolved = self._resolve_tier(model, tier)
         key = (graph_id, ver)
         with self._lock:
-            slices = self._shard_cache.get(key)
+            slices = self._cache.get("shard", key)
         if slices is None:
             self._count("operand_cache_misses")
             slices = build_sharded_operands(g, part, e.cfg)
+            nb = self._shard_entry_nbytes(slices)
             with self._lock:
+                # no spill_fn: the slice tuple re-derives from the engine's
+                # own (partition, Graph) registry snapshot — a host-RAM
+                # spill would duplicate state the engine already holds
                 if self._graph_version.get(graph_id) == ver:
-                    self._shard_cache[key] = slices
+                    self._cache.put("shard", key, slices, nbytes=nb,
+                                    remat_s=transfer_cost(nb))
         else:
             self._count("operand_cache_hits")
         x, ops, mask = stack_shard_slices(slices)
@@ -1245,14 +1664,15 @@ class GraphServe:
     def _halo_bytes(self, cfg: GNNConfig, part: GraphShards
                     ) -> Tuple[int, int]:
         """(compressed, exact) collective bytes one sharded forward moves:
-        ring-psum traffic is ~2(S-1)/S of each exchanged buffer per
-        participant, int8 (1 B/elt) on the compressed wire vs fp32
-        (4 B/elt) exact — the same accounting as
-        `core.partition.modelled_sharded_latency`, over the kind's actual
-        exchange schedule (`sharded_exchange_widths`)."""
+        ring-psum traffic is priced through the single owner of the ring
+        factor (`dist.compress.ring_psum_nbytes` — also what
+        `core.partition.modelled_sharded_latency` uses, so metric and
+        model cannot drift), int8 (1 B/elt) on the compressed wire vs fp32
+        (4 B/elt) exact, over the kind's actual exchange schedule
+        (`sharded_exchange_widths`)."""
         elems = sum(part.full_rows * w for w in sharded_exchange_widths(cfg))
-        moved = 2 * (part.shards - 1) / part.shards * elems
-        return int(moved), int(4 * moved)
+        comp = ring_psum_nbytes(part.shards, elems, bytes_per_elt=1)
+        return int(comp), int(4 * comp)
 
     def _execute_sharded(self, r: GNNRequest) -> None:
         """DEVICE stage of one sharded dispatch (§12): the plan runs every
@@ -1372,6 +1792,22 @@ class GraphServe:
                 self.metrics["collective_bytes_compressed"],
             "collective_bytes_exact":
                 self.metrics["collective_bytes_exact"],
+            # §13 bounded cache hierarchy: residency vs budget, capacity
+            # evictions split by outcome (spilled to host-RAM compact form
+            # vs dropped — conservation: evictions == spilled + dropped),
+            # second-level hits served from the spill store, admission
+            # rejections, and the GrAd incremental-update counters
+            "cache_resident_bytes": self._cache.resident_bytes,
+            "cache_budget_bytes": self.sc.device_cache_budget_bytes,
+            "cache_evictions": self._cache.evictions,
+            "cache_spilled": self._cache.spilled,
+            "cache_dropped": self._cache.dropped,
+            "cache_spill_entries": self._cache.spill_entries,
+            "cache_spill_hits": self.metrics["cache_spill_hits"],
+            "cache_admission_rejects":
+                self.metrics["cache_admission_rejects"],
+            "delta_updates": self.metrics["delta_updates"],
+            "delta_fallbacks": self.metrics["delta_fallbacks"],
             "tiers": self.tier_summary(),
             "accuracy_delta_vs_fp32": {
                 name: dict(e.accuracy_delta)

@@ -42,7 +42,16 @@ Every engine contract survives the scheduler: plans/materializers are only
 ever REPLAYED (zero recompiles, `assert_warm`), CacheG hit/miss accounting
 is unchanged (worker races on a cold key may double-build; both count as
 misses and the insert is version-checked), and tier fallback happens in the
-host stage exactly as in the sync path.
+host stage exactly as in the sync path. Under a §13 cache budget, HOST-stage
+workers are also where spill faults surface: a `prepare_query` that misses
+the device cache but hits the host-RAM spill store re-materializes the
+compact form inside the host stage (counted `cache_spill_hits`, never an
+`operand_cache_miss`), so eviction pressure converts into host-stage
+latency, never device-stage stalls — and a budget-evicted entry re-inserted
+by one worker may evict another graph mid-flight, which is safe for the
+same reason racing double-builds are: requests carry their operand
+snapshot, cache state only gates REUSE. The engine summary the scheduler
+re-exports includes the cache residency/eviction/spill counters.
 """
 from __future__ import annotations
 

@@ -25,6 +25,13 @@ except ImportError:                               # tier-1 runs without it
     pass
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (training loops, LLM serving); "
+        "deselect with -m 'not slow'")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -78,13 +78,13 @@ def test_stack_padded_rejects_mixed_buckets():
 def test_compiled_blobs_equal_distinct_plans(engine):
     # after warmup: one plan trace per (kind, bucket, fusion mode) — warmup
     # pre-traces BOTH fusion modes (DESIGN.md §11) — plus one CacheG
-    # materializer trace per (kind, bucket); the 9 mixed-size requests all
-    # replayed warm blobs
-    assert engine.compiled_blobs == len(engine.models) * len(BUCKETS) * 3
+    # materializer trace and one GrAd delta-patcher trace (§13) per
+    # (kind, bucket); the 9 mixed-size requests all replayed warm blobs
+    assert engine.compiled_blobs == len(engine.models) * len(BUCKETS) * 4
     engine.assert_warm()
     s = engine.summary()
     assert s["requests"] == len(SIZES)
-    assert s["compiled_blobs"] == len(engine.models) * len(BUCKETS) * 3
+    assert s["compiled_blobs"] == len(engine.models) * len(BUCKETS) * 4
 
 
 def test_requests_span_all_buckets(engine):
@@ -194,8 +194,9 @@ def test_identical_models_share_one_blob():
     eng.register_model("tenant_b", cfg)
     eng.warmup()
     # one shared plan trace per fusion mode (warmup pre-traces both,
-    # DESIGN.md §11) + one CacheG materializer trace for the bucket
-    assert eng.compiled_blobs == 3
+    # DESIGN.md §11) + one CacheG materializer trace + one GrAd
+    # delta-patcher trace (§13) for the bucket — shared across tenants too
+    assert eng.compiled_blobs == 4
     eng.submit(_graph(50, 0), model="tenant_a")
     eng.submit(_graph(60, 1), model="tenant_b")
     eng.run()
@@ -241,8 +242,9 @@ def test_serving_benchmark_emits_throughput_rows():
     lat = [r for r in rows if n_matches(r["name"], "latency")][0]
     assert "p50=" in lat["derived"] and "p99=" in lat["derived"]
     blobs = [r for r in rows if n_matches(r["name"], "compiled_blobs")][0]
-    # 2 kinds x 3 buckets x (2 fusion-mode plans + CacheG materializer)
-    assert blobs["derived"].startswith("18 ")
+    # 2 kinds x 3 buckets x (2 fusion-mode plans + CacheG materializer
+    # + GrAd delta patcher, §13)
+    assert blobs["derived"].startswith("24 ")
 
 
 def n_matches(name, suffix):

@@ -31,9 +31,12 @@ from hypothesis import given, strategies as st  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core.graph import (BucketLadder, node_bucket, pad_graph,  # noqa: E402
-                              required_capacity, symg_pack, symg_unpack)
-from repro.core.models import (GNNConfig, _unpack_adjacency,  # noqa: E402
+from repro.core.graph import (BucketLadder, Graph,  # noqa: E402
+                              edge_index_from_adjacency, node_bucket,
+                              pad_graph, required_capacity, symg_pack,
+                              symg_unpack)
+from repro.core.models import (OPERAND_FIELDS, GNNConfig,  # noqa: E402
+                               _unpack_adjacency,
                                build_operands, build_sharded_operands,
                                build_sharded_plan, calibrate_tier,
                                compact_operands, forward_grannite,
@@ -368,3 +371,142 @@ def test_grasp_budget_monotone(cb, dcb):
     lo, hi = cb * 128, (cb + dcb) * 128
     assert grasp_max_nnz(lo) <= grasp_max_nnz(hi)
     assert 1 <= grasp_max_nnz(lo) <= cb
+
+
+# ------------------------------------- GrAd delta-update differential (§13)
+
+
+@given(st.sampled_from(("gcn", "gat", "sage")),
+       st.sampled_from(("fp32", "int8")),
+       st.integers(20, 100), st.integers(0, 2 ** 16),
+       st.integers(0, 5), st.integers(0, 5))
+def test_delta_update_equals_full_rebuild(kind, tier, n, seed, n_add, n_rm):
+    """update_delta ≡ full rebuild, across kinds × tiers × delta shapes:
+    after a random symmetric edge delta, the patched device operands (and
+    for GCN int8, the patched int8 Â — bit-for-bit) and the served logits
+    must equal a FRESH attach of the post-delta structure. SAGE exercises
+    the documented fallback (sampled mask: `update()` under the hood), and
+    the zero-recompile contract holds through patch and fallback alike."""
+    eng = _engine(kind)
+    rng = np.random.default_rng(seed)
+    g = _graph(n, seed)
+    gid = eng.attach(g, model=kind)
+    gid2 = None
+    try:
+        eng.query(gid, tier=tier)
+        eng.run()
+        pg = eng.graphs[gid][1]
+        iu, ju = np.triu_indices(n, 1)
+        on = pg.adj[iu, ju] != 0
+        absent = np.flatnonzero(~on)
+        present = np.flatnonzero(on)
+        add = [(int(iu[k]), int(ju[k])) for k in
+               rng.choice(absent, size=min(n_add, len(absent)),
+                          replace=False)] if len(absent) else []
+        rm = [(int(iu[k]), int(ju[k])) for k in
+              rng.choice(present, size=min(n_rm, len(present)),
+                         replace=False)] if len(present) else []
+        if not add and not rm:
+            assert eng.update_delta(gid) is True        # vacuous no-op
+            return
+        applied = eng.update_delta(gid, add_edges=add, remove_edges=rm)
+        assert applied is (kind != "sage")
+        eng.query(gid, tier=tier)
+        r1 = eng.run()[-1]
+        eng.assert_warm()
+        pg1 = eng.graphs[gid][1]
+        gid2 = eng.attach(Graph(
+            edge_index=edge_index_from_adjacency(pg1.adj, n),
+            num_nodes=n, features=g.features), model=kind)
+        eng.query(gid2, tier=tier)
+        r2 = eng.run()[-1]
+        eng.assert_warm()
+        k1 = (gid, eng._graph_version[gid])
+        k2 = (gid2, eng._graph_version[gid2])
+        o1, o2 = eng._operand_cache[k1], eng._operand_cache[k2]
+        for f in OPERAND_FIELDS[kind]:
+            np.testing.assert_array_equal(np.asarray(getattr(o1, f)),
+                                          np.asarray(getattr(o2, f)))
+        if kind == "gcn" and tier == "int8":
+            t1 = eng._tier_operand_cache[k1]
+            t2 = eng._tier_operand_cache[k2]
+            np.testing.assert_array_equal(np.asarray(t1.agg_aq),
+                                          np.asarray(t2.agg_aq))
+            np.testing.assert_array_equal(np.asarray(t1.agg_a_scale),
+                                          np.asarray(t2.agg_a_scale))
+        np.testing.assert_array_equal(np.asarray(r1.logits),
+                                      np.asarray(r2.logits))
+    finally:
+        eng.detach(gid)
+        if gid2 is not None:
+            eng.detach(gid2)
+
+
+# --------------------------------- §13 byte-accounting under interleavings
+
+
+_BUDGETED = {}
+
+
+def _budgeted_engine():
+    """One budgeted module-scope engine (warm engines are expensive): a
+    budget fitting ~2 bucket-128 GCN primaries, so random interleavings
+    exercise eviction and spill constantly."""
+    if "eng" not in _BUDGETED:
+        from repro.runtime.cache import estimate_dense_entry_bytes
+        entry = estimate_dense_entry_bytes(1, 128)
+        sc = GraphServeConfig(ladder=BucketLadder(buckets=(128,)),
+                              batch_slots=2, return_logits=True,
+                              device_cache_budget_bytes=2 * entry + 40_000)
+        eng = GraphServe(sc, seed=0)
+        eng.register_model("gcn", GNNConfig(
+            kind="gcn", in_feats=IN_FEATS, hidden=8, num_classes=CLASSES),
+            tiers=("fp32", "int8"))
+        eng.warmup()
+        eng.calibrate("gcn", _graph(64, seed=999))
+        _BUDGETED["eng"] = eng
+    return _BUDGETED["eng"]
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 3),
+                          st.integers(0, 2 ** 10)),
+                min_size=1, max_size=12))
+def test_cache_byte_accounting_under_random_interleavings(ops):
+    """After EVERY attach/query/update_delta/detach in a random sequence:
+    the per-entry ledger sums to `cache_resident_bytes`, residency never
+    exceeds the budget, and evictions == spilled + dropped. Nothing ever
+    traces (eviction/spill/patch replay warm blobs)."""
+    eng = _budgeted_engine()
+    cm = eng._cache
+    slots = {}
+    try:
+        for op, slot, seed in ops:
+            if op == 0 and slot not in slots:
+                slots[slot] = eng.attach(_graph(30 + slot, seed % 7),
+                                         model="gcn")
+            elif op == 1 and slot in slots:
+                eng.query(slots[slot], tier="int8" if seed % 2 else "fp32")
+                eng.run()
+            elif op == 2 and slot in slots:
+                gid = slots[slot]
+                pg = eng.graphs[gid][1]
+                rng = np.random.default_rng(seed)
+                i, j = rng.choice(pg.num_nodes, size=2, replace=False)
+                pair = [(int(min(i, j)), int(max(i, j)))]
+                if pg.adj[i, j]:
+                    eng.update_delta(gid, remove_edges=pair)
+                else:
+                    eng.update_delta(gid, add_edges=pair)
+            elif op == 3 and slot in slots:
+                eng.detach(slots.pop(slot))
+            with eng._lock:
+                sizes = cm.entry_sizes()
+                resident = cm.resident_bytes
+                ev, sp, dr = cm.evictions, cm.spilled, cm.dropped
+            assert sum(sizes.values()) == resident
+            assert resident <= eng.sc.device_cache_budget_bytes
+            assert ev == sp + dr
+    finally:
+        for gid in slots.values():
+            eng.detach(gid)
+    eng.assert_warm()

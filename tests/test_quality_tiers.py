@@ -103,13 +103,17 @@ def test_tier_plans_counted_in_compiled_blobs():
     the per-bucket tier-operand deriver (int8 Â), all inside the
     zero-recompile contract."""
     eng = _engine("gcn")
-    # (fp32 + int8(=int8+grax)) × 2 fusion modes, materializer, int8-Â deriver
-    assert eng.compiled_blobs == 2 * 2 + 1 + 1
+    # (fp32 + int8(=int8+grax)) × 2 fusion modes, materializer, int8-Â
+    # deriver, plus the §13 GrAd delta patcher AND its tier row-requant
+    # trace (a QuantGr GCN tier keeps a derived int8 Â to patch)
+    assert eng.compiled_blobs == 2 * 2 + 1 + 1 + 1 + 1
     eng = _engine("gat")
-    assert eng.compiled_blobs == 3 * 2 + 1  # no deriver: model-level quant
-    # untier'd registration stays a single-plan engine (back-compat)
+    # no deriver (model-level quant), patcher only — no tier form to patch
+    assert eng.compiled_blobs == 3 * 2 + 1 + 1
+    # untier'd registration stays a single-plan engine (back-compat):
+    # fp32-only means no int8 Â, so the patcher warms without the requant
     eng = _engine("gcn", tiers=None)
-    assert eng.compiled_blobs == 1 * 2 + 1
+    assert eng.compiled_blobs == 1 * 2 + 1 + 1
 
 
 def test_zero_recompiles_across_mixed_tier_traffic():
