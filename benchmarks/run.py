@@ -7,8 +7,8 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record) and
 writes benchmarks/results.json. ``--bench-json`` additionally writes the
 serving-throughput, CacheG operand-bytes, quality-tier, pipeline-overlap,
-grasp, fused-layer, sharded-serving, and cache-pressure rows to a
-standalone file (CI
+grasp, fused-layer, sharded-serving, cache-pressure, and SLO-serving rows
+to a standalone file (CI
 uploads it as the ``BENCH_gnn`` artifact per push to track the perf
 trajectory; the repo-root BENCH_gnn.json is a committed point-in-time
 snapshot — schema in benchmarks/README.md). ``--only`` runs a single
@@ -50,6 +50,7 @@ def _families(args, datasets, gnn_paper, lm_subs):
         "fused_layers": lambda: gnn_paper.fused_layers(quick=q),
         "sharded_serving": lambda: gnn_paper.sharded_serving(quick=q),
         "cache_pressure": lambda: gnn_paper.cache_pressure(quick=q),
+        "slo_serving": lambda: gnn_paper.slo_serving(quick=q),
         "lm_subs": lambda: (lm_subs.ssd_vs_sequential(),
                             lm_subs.moe_dispatch_paths(),
                             lm_subs.serving_bucket_reuse()),
@@ -118,6 +119,9 @@ def main() -> None:
     # bounded cache hierarchy under churn + GrAd delta updates
     # (DESIGN.md §13): eviction/spill-fault costs and delta-vs-rebuild
     families["cache_pressure"]()
+    # SLO-aware serving (DESIGN.md §14): deadline hit-rate static vs
+    # governed + measured-EWMA vs roofline-only backend routing
+    families["slo_serving"]()
     families["lm_subs"]()
     _write(args, ROWS)
 
@@ -135,7 +139,8 @@ def _write(args, rows) -> None:
                                          "grasp_serving/",
                                          "fused_layers/",
                                          "sharded_serving/",
-                                         "cache_pressure/"))]
+                                         "cache_pressure/",
+                                         "slo_serving/"))]
         with open(args.bench_json, "w") as f:
             json.dump({"rows": perf}, f, indent=1)
         print(f"# wrote {len(perf)} perf rows -> {args.bench_json}")

@@ -19,7 +19,13 @@ flag:
              update(), released by detach();
   observe  — summary() reports `agg_backends`, `grasp_batches`, and
              `backend_fallbacks` (a sparse dispatch that quietly ran
-             dense — e.g. on a CPU host, where the skip grid cannot run).
+             dense — e.g. on a CPU host, where the skip grid cannot run);
+  correct  — once BOTH backends hold measured batch latencies at a
+             (model, bucket), the §14 latency bank overrides the
+             roofline RANKING (never eligibility): on this CPU host the
+             ref grasp path skips nothing, so late sweep entries can
+             route dense where the cold model said grasp — the measured
+             column below shows what the engine actually consulted.
 
   PYTHONPATH=src python examples/sparse_serving.py
 """
@@ -56,18 +62,23 @@ def main():
                            cross_frac=cross, seed=3)
         pg = eng.sc.ladder.pad(g)
         st = block_stats(pg.norm_adj)
+        # the engine's rule, verbatim: modelled costs, overridden by the
+        # latency bank's measured pair once both backends have served here
+        measured = eng._measured_agg_pair("gcn", cap)
         choice, dense_s, grasp_s = select_agg_backend(
             cap, hidden, nnz_blocks=st["nnz_blocks"],
-            max_row_nnz=st["max_row_nnz"])
+            max_row_nnz=st["max_row_nnz"], measured=measured)
         gid = eng.attach(g, model="gcn")
         eng.query(gid)
         eng.query(gid)        # same (model, bucket, tier, backend) key:
         eng.run()             # one BATCHED dispatch of 2
         served = eng.finished[-1].backend
         assert served == choice
+        both = all(m is not None for m in measured)
         print(f"{name:>12} {g.num_edges / n**2:>10.4f} "
               f"{st['block_density']:>10.2f} {dense_s * 1e6:>10.1f}us "
-              f"{grasp_s * 1e6:>10.1f}us {served:>8}")
+              f"{grasp_s * 1e6:>10.1f}us {served:>8}"
+              f"{'  (measured override live)' if both else ''}")
         eng.detach(gid)
 
     eng.assert_warm()         # the flip cost zero recompiles

@@ -25,7 +25,7 @@ bucket, whether the batched `bitmap_spmm` dispatch beats the dense matmul.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -323,7 +323,9 @@ def agg_cost_model(capacity: int, feats: int, *, nnz_blocks: int,
 
 def select_agg_backend(capacity: int, feats: int, *, nnz_blocks: int,
                        max_row_nnz: int, mode: str = "auto",
-                       block_size: int = MXU_TILE
+                       block_size: int = MXU_TILE,
+                       measured: Optional[Tuple[Optional[float],
+                                                Optional[float]]] = None
                        ) -> Tuple[str, float, float]:
     """The per-(graph, bucket) AggBackend decision: "dense" | "grasp".
 
@@ -332,8 +334,18 @@ def select_agg_backend(capacity: int, feats: int, *, nnz_blocks: int,
     regardless of `mode`; its reported grasp cost is priced at the list
     width it WOULD need (`max_row_nnz`), so the returned costs stay
     meaningful either way. Within eligibility, `mode="grasp"` forces the
-    sparse path and `mode="auto"` takes the modelled-cost winner. Returns
-    (backend, dense_s, grasp_s) so callers can surface the decision.
+    sparse path and `mode="auto"` takes the cost winner.
+
+    `measured=(dense_s, grasp_s)` is the hardware-in-the-loop override
+    (DESIGN.md §14): when BOTH backends carry a real measured latency
+    (from the serving `LatencyBank`), auto mode ranks on those instead of
+    the analytic model — measurement corrects the roofline where they
+    disagree (BENCH_gnn.json's grasp rows on CPU). A partial pair (either
+    side None) falls back to the model: an unmeasured path is never
+    condemned by the measured one. Eligibility is never overridden —
+    measurement can't make an unrepresentable row representable. Returns
+    (backend, dense_s, grasp_s) modelled costs so callers can surface the
+    decision.
     """
     if mode not in ("auto", "grasp"):
         raise ValueError(f"mode must be 'auto' or 'grasp', got {mode!r}")
@@ -345,7 +357,11 @@ def select_agg_backend(capacity: int, feats: int, *, nnz_blocks: int,
         return "dense", dense_s, grasp_s
     if mode == "grasp":
         return "grasp", dense_s, grasp_s
-    return ("grasp" if grasp_s < dense_s else "dense"), dense_s, grasp_s
+    rank_dense, rank_grasp = dense_s, grasp_s
+    if measured is not None and measured[0] is not None \
+            and measured[1] is not None:
+        rank_dense, rank_grasp = float(measured[0]), float(measured[1])
+    return ("grasp" if rank_grasp < rank_dense else "dense"), dense_s, grasp_s
 
 
 def bfs_reorder(adj: np.ndarray, num_nodes: int) -> np.ndarray:

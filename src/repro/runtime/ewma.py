@@ -1,0 +1,195 @@
+"""Shared EWMA machinery: trainer straggler gate + serving latency bank.
+
+One owner for every exponentially-weighted average in the runtime
+(DESIGN.md §14).  Two consumers:
+
+* `StragglerGate` — the trainer's per-step straggler detector
+  (previously inlined in `runtime/trainer.py`).  The old inline code
+  seeded the EWMA with the FIRST sample at weight 1.0
+  (``ewma = wall if ewma is None else 0.9*ewma + 0.1*wall``), so the
+  compile-heavy first step dominated the baseline for dozens of steps
+  and masked real stragglers.  `Ewma` fixes that with standard bias
+  correction: early samples share weight symmetrically, so the estimate
+  after k samples is a proper weighted mean of all k, not 90% first
+  sample.
+
+* `LatencyBank` — the serving cost oracle.  Per BatchKey-shaped key it
+  keeps a bias-corrected EWMA of measured `_execute_batch` wall spans,
+  seeded (for prediction only — the seed never blends into the average)
+  from the analytic roofline model.  Routing decisions
+  (`select_agg_backend` measured override, tolerance tier router,
+  governor p99) read predictions from here, so the model supplies the
+  cold-start ordering and measurement takes over as soon as samples
+  exist.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Hashable, Optional
+
+
+class Ewma:
+    """Bias-corrected exponential moving average.
+
+    Maintains ``s = (1-a)*s + a*x`` and ``den = (1-a)*den + a`` with
+    ``value = s/den`` — after one sample the value IS that sample, after
+    k samples it is the bias-corrected weighted mean (geometric weights
+    renormalized over the samples actually seen).  This removes the
+    first-sample asymmetry of the naive ``ewma or x`` seeding: a single
+    outlier first observation decays at the same rate as any other
+    sample instead of anchoring the series.
+    """
+
+    __slots__ = ("alpha", "_s", "_den", "count", "min", "max")
+
+    def __init__(self, alpha: float = 0.1):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = float(alpha)
+        self._s = 0.0
+        self._den = 0.0
+        self.count = 0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, x: float) -> float:
+        a = self.alpha
+        self._s = (1.0 - a) * self._s + a * float(x)
+        self._den = (1.0 - a) * self._den + a
+        self.count += 1
+        if x < self.min:
+            self.min = float(x)
+        if x > self.max:
+            self.max = float(x)
+        return self.value
+
+    @property
+    def value(self) -> Optional[float]:
+        if self.count == 0:
+            return None
+        return self._s / self._den
+
+
+class StragglerGate:
+    """Trainer straggler detector over a bias-corrected EWMA baseline.
+
+    A step is a straggler when ``wall > factor * baseline``; straggler
+    samples are excluded from the baseline (they are what the baseline
+    exists to detect).  The first sample always trains the baseline —
+    with bias correction it no longer anchors it.
+    """
+
+    def __init__(self, factor: float, alpha: float = 0.1):
+        self.factor = float(factor)
+        self._ewma = Ewma(alpha)
+
+    @property
+    def baseline(self) -> Optional[float]:
+        return self._ewma.value
+
+    def check(self, wall: float) -> bool:
+        """Record one step wall-time; return True when it straggled."""
+        base = self._ewma.value
+        straggler = base is not None and wall > self.factor * base
+        if not straggler:
+            self._ewma.observe(wall)
+        return straggler
+
+
+@dataclass
+class _BankEntry:
+    ewma: Ewma
+    seed: Optional[float] = None  # roofline-modelled seconds, prediction-only
+
+
+class LatencyBank:
+    """Per-key measured-latency oracle with model-seeded cold start.
+
+    Keys are whatever tuple the caller routes on — GraphServe uses
+    ``(kind, bucket, tier, backend, fusion, shards)``.  `predict` returns
+    the measured EWMA when samples exist, else the seed registered by
+    `seed` (typically the analytic roofline figure), else None.  The seed
+    intentionally never mixes into the average: predictions stay inside
+    ``[min, max]`` of the observed samples once any exist, which is the
+    invariant the hypothesis suite pins.
+    """
+
+    def __init__(self, alpha: float = 0.2):
+        self.alpha = float(alpha)
+        self._entries: Dict[Hashable, _BankEntry] = {}
+
+    def _entry(self, key: Hashable) -> _BankEntry:
+        e = self._entries.get(key)
+        if e is None:
+            e = self._entries[key] = _BankEntry(Ewma(self.alpha))
+        return e
+
+    def seed(self, key: Hashable, modelled_s: float) -> None:
+        """Register the model-predicted latency for a cold key."""
+        self._entry(key).seed = float(modelled_s)
+
+    def observe(self, key: Hashable, seconds: float) -> None:
+        self._entry(key).ewma.observe(float(seconds))
+
+    def predict(self, key: Hashable) -> Optional[float]:
+        e = self._entries.get(key)
+        if e is None:
+            return None
+        if e.ewma.count > 0:
+            return e.ewma.value
+        return e.seed
+
+    def measured(self, key: Hashable) -> Optional[float]:
+        """Measured EWMA only — None until a real sample lands."""
+        e = self._entries.get(key)
+        if e is None or e.ewma.count == 0:
+            return None
+        return e.ewma.value
+
+    def samples(self, key: Hashable) -> int:
+        e = self._entries.get(key)
+        return 0 if e is None else e.ewma.count
+
+    def measured_pair(
+        self,
+        match: Callable[[Hashable], bool],
+        backend_of: Callable[[Hashable], str],
+    ) -> Dict[str, float]:
+        """Best (minimum) measured latency per backend over matching keys.
+
+        Used by the backend router: for a given (kind, bucket) it asks
+        "what is the cheapest measured latency we have seen through each
+        aggregation backend?" — the override only fires when BOTH
+        backends have real samples, so an unmeasured path can never be
+        condemned by the model alone.
+        """
+        best: Dict[str, float] = {}
+        for key, e in self._entries.items():
+            if e.ewma.count == 0 or not match(key):
+                continue
+            b = backend_of(key)
+            v = e.ewma.value
+            if b not in best or v < best[b]:
+                best[b] = v
+        return best
+
+    def ewma_vs_model(self) -> Optional[float]:
+        """Mean measured/modelled ratio over keys holding both figures.
+
+        The serving summary exposes this as the drift signal between the
+        roofline seed and reality — 1.0 means the model prices batches
+        exactly; the BENCH grasp inversion shows up as a ratio far from 1
+        on the grasp keys.
+        """
+        ratios = [
+            e.ewma.value / e.seed
+            for e in self._entries.values()
+            if e.ewma.count > 0 and e.seed and e.seed > 0
+        ]
+        if not ratios:
+            return None
+        return sum(ratios) / len(ratios)
+
+    def keys(self):
+        return list(self._entries.keys())

@@ -140,7 +140,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -165,11 +164,15 @@ from repro.core.models import (FUSION_MODES, OPERAND_FIELDS, DeltaSpec,
                                stack_tier_operands, unshard_logits)
 from repro.core.partition import (GraphShards, partition_for_ladder,
                                   patch_halo, transfer_cost)
-from repro.core.sparsity import block_stats, grasp_max_nnz, select_agg_backend
+from repro.core.sparsity import (HBM_BW, MXU_RATE, block_stats,
+                                 grasp_max_nnz, select_agg_backend)
 from repro.dist.compress import ring_psum_nbytes
 from repro.runtime.cache import (CacheAdmissionError, DeviceCacheManager,
                                  estimate_dense_entry_bytes,
                                  estimate_shard_entry_bytes, pytree_nbytes)
+from repro.runtime.clock import WALL, Clock
+from repro.runtime.ewma import LatencyBank
+from repro.runtime.slo import SLOConfig, SLOGovernor
 
 # Per-kind serving techniques for models registered WITHOUT a tier ladder.
 # GraSp is deliberately NOT a technique flag here: block-sparse aggregation
@@ -221,6 +224,36 @@ def best_fill_key(stats: Dict[BatchKey, Tuple[int, int]], batch_slots: int,
                                kv[1][1]))[0]
 
 
+def edf_best_fill_key(stats: Dict[BatchKey, Tuple[int, int, float]],
+                      batch_slots: int,
+                      last_dispatch: Optional[Dict[str, int]] = None
+                      ) -> BatchKey:
+    """Slack-aware EDF variant of `best_fill_key` (DESIGN.md §14).
+
+    `stats` values are `(count, head_order, min_slack)` where `min_slack`
+    is the tightest `deadline - now` (seconds) among the key's pending
+    requests, `+inf` when none carries a deadline. Selection order:
+
+      1. best fill — identical to `best_fill_key`: batching efficiency is
+         still the primary axis (a tight deadline never justifies a 1-of-N
+         dispatch while a full batch waits — that would miss MORE
+         deadlines under load);
+      2. tightest slack — among equal fills, the key whose most urgent
+         request expires soonest dispatches first (earliest-deadline-first
+         as the tie-break, which is where a deadline actually changes the
+         outcome);
+      3. per-model fairness, then FIFO — unchanged from `best_fill_key`,
+         so deadline-free traffic batches exactly as before (every slack
+         is +inf and rules 3-4 decide).
+    """
+    last_dispatch = last_dispatch or {}
+    return min(stats.items(),
+               key=lambda kv: (-min(kv[1][0], batch_slots),
+                               kv[1][2],
+                               last_dispatch.get(kv[0][0], -1),
+                               kv[1][1]))[0]
+
+
 def pending_stats(reqs: Sequence["GNNRequest"]
                   ) -> Dict[BatchKey, Tuple[int, int]]:
     """Fold a pending-request sequence into `best_fill_key` stats."""
@@ -229,6 +262,20 @@ def pending_stats(reqs: Sequence["GNNRequest"]
         k = (r.model, r.bucket, r.tier, r.backend, r.fusion, r.shards)
         c = stats.get(k)
         stats[k] = (1, i) if c is None else (c[0] + 1, c[1])
+    return stats
+
+
+def edf_pending_stats(reqs: Sequence["GNNRequest"], now: float
+                      ) -> Dict[BatchKey, Tuple[int, int, float]]:
+    """Fold pending requests into `edf_best_fill_key` stats at time `now`."""
+    stats: Dict[BatchKey, Tuple[int, int, float]] = {}
+    for i, r in enumerate(reqs):
+        k = (r.model, r.bucket, r.tier, r.backend, r.fusion, r.shards)
+        slack = (r.deadline_s - now if r.deadline_s is not None
+                 else float("inf"))
+        c = stats.get(k)
+        stats[k] = ((1, i, slack) if c is None
+                    else (c[0] + 1, c[1], min(c[2], slack)))
     return stats
 
 
@@ -287,6 +334,12 @@ class GNNRequest:
     backend: str = "dense"                 # resolved agg backend (§10)
     fusion: str = "none"                   # resolved fusion mode (§11)
     tier_ops: Optional[TierOperands] = None  # derived (e.g. GCN int8 Â)
+    deadline_s: Optional[float] = None     # absolute clock deadline (§14);
+    # None = no SLO — the request can never expire or be flagged late
+    tolerance: Optional[float] = None      # max |accuracy_delta| (points)
+    # the tier router may trade away (§14); None = no tolerance routing
+    deadline_missed: bool = False          # §14: expired unserved (preds is
+    # None) or finished past its deadline (preds still delivered)
     shards: int = 0                        # >0: sharded dispatch (§12);
     # then `ops` holds the STACKED per-shard operand row blocks and the
     # three fields below carry the rest of the sharded calling convention
@@ -332,6 +385,7 @@ class _ModelEntry:
     default_tier: str
     agg_backend: str = "dense"             # "dense" | "auto" | "grasp" (§10)
     default_fusion: str = "none"           # "none" | "layer" (§11)
+    name: str = ""                         # registry name (bank/routing key)
     # once per (model, tier): calibrate_tier pytrees for QuantGr tiers, and
     # the measured accuracy_delta_vs_fp32 for every non-fp32 tier
     calibrations: Dict[str, Dict] = dataclasses.field(default_factory=dict)
@@ -344,9 +398,20 @@ class _ModelEntry:
 
 
 class GraphServe:
-    def __init__(self, sc: Optional[GraphServeConfig] = None, *, seed: int = 0):
+    def __init__(self, sc: Optional[GraphServeConfig] = None, *, seed: int = 0,
+                 clock: Optional[Clock] = None,
+                 slo: Optional[SLOConfig] = None):
         self.sc = sc or GraphServeConfig()
         self.seed = seed
+        # §14: every timestamp, deadline comparison, and latency sample in
+        # the serving path reads THIS clock — tests inject a fake one and
+        # drive the whole SLO loop without a single real sleep
+        self.clock = clock if clock is not None else WALL
+        # §14: measured-latency oracle per BatchKey, roofline-seeded; the
+        # single cost source behind backend routing and the tier router
+        self.bank = LatencyBank()
+        # §14: optional SLO governor — None keeps serving exactly pre-§14
+        self.governor = SLOGovernor(slo) if slo is not None else None
         self.models: Dict[str, _ModelEntry] = {}
         self.queue: List[GNNRequest] = []
         self.finished: List[GNNRequest] = []
@@ -398,7 +463,8 @@ class GraphServe:
                         "collective_bytes_compressed": 0,
                         "collective_bytes_exact": 0,
                         "cache_spill_hits": 0, "cache_admission_rejects": 0,
-                        "delta_updates": 0, "delta_fallbacks": 0}
+                        "delta_updates": 0, "delta_fallbacks": 0,
+                        "deadline_misses": 0, "shed_requests": 0}
 
     def _count(self, name: str, delta=1) -> None:
         with self._lock:
@@ -541,7 +607,49 @@ class GraphServe:
                                         tiers=registry,
                                         default_tier=default_tier,
                                         agg_backend=agg_backend,
-                                        default_fusion=fusion)
+                                        default_fusion=fusion,
+                                        name=name)
+
+    def _modelled_batch_s(self, model: str, bucket: int, tier: str,
+                          backend: str, shards: int) -> float:
+        """Roofline seed for the latency bank (§14): modelled seconds for
+        ONE dispatch under this key. Two-layer GNN forward priced with the
+        same MXU/HBM constants as `agg_cost_model`: per layer one dense
+        (cap, cap) @ (cap, w) aggregation plus the (cap, w_in) @ (w_in,
+        w_out) combine, times the batch width. Backend/tier scaling is
+        deliberately coarse (grasp halves the aggregation term, int8 runs
+        combines at the 2x rate over quarter bytes): the seed only has to
+        ORDER cold keys — the first measured sample replaces it outright,
+        and `ewma_vs_model` in `summary()` tracks how wrong it was."""
+        cfg = self.models[model].cfg
+        widths = [cfg.in_feats, cfg.hidden, cfg.num_classes]
+        b = 1 if shards else self.sc.batch_slots
+        cap = bucket
+        quant = self.models[model].tiers[tier].quantgr
+        total = 0.0
+        for w_in, w_out in zip(widths[:-1], widths[1:]):
+            agg_flops = 2.0 * cap * cap * w_in
+            agg_bytes = 4.0 * (cap * cap + 2 * cap * w_in)
+            agg = max(agg_flops / MXU_RATE, agg_bytes / HBM_BW)
+            if backend == "grasp":
+                agg *= 0.5
+            comb_flops = 2.0 * cap * w_in * w_out
+            comb_bytes = 4.0 * cap * (w_in + w_out) + 4.0 * w_in * w_out
+            rate, byte_scale = ((2.0 * MXU_RATE, 0.25) if quant
+                                else (MXU_RATE, 1.0))
+            comb = max(comb_flops / rate, comb_bytes * byte_scale / HBM_BW)
+            total += agg + comb
+        return total * b
+
+    def _bank_key(self, model: str, bucket: int, tier: str, backend: str,
+                  fusion: str, shards: int) -> BatchKey:
+        return (model, bucket, tier, backend, fusion, shards)
+
+    def _seed_bank(self, model: str, bucket: int, tier: str, backend: str,
+                   fusion: str, shards: int) -> None:
+        key = self._bank_key(model, bucket, tier, backend, fusion, shards)
+        self.bank.seed(key, self._modelled_batch_s(model, bucket, tier,
+                                                   backend, shards))
 
     def plan_for(self, model: str, bucket: int, tier: Optional[str] = None,
                  backend: str = "dense", fusion: str = "none",
@@ -551,7 +659,14 @@ class GraphServe:
         # identical (cfg, techniques, backend, fusion, shards) share one
         # compiled blob per bucket
         e = self.models[model]
-        t = e.tiers[tier if tier is not None else e.default_tier]
+        tier_name = tier if tier is not None else e.default_tier
+        t = e.tiers[tier_name]
+        # §14: every plan resolution (warmup included) seeds the latency
+        # bank's modelled figure for its batch key, so routing has a cost
+        # ordering before the first measured sample lands
+        self._seed_bank(model, bucket, tier_name,
+                        "dense" if shards else backend,
+                        "none" if shards else fusion, shards)
         if shards:
             # sharded plans (§12) are dense/unfused single-graph dispatches
             # — the shard axis occupies the leading dim, so batch is 0 and
@@ -844,6 +959,70 @@ class GraphServe:
             return "fp32"
         return tier
 
+    def _tier_for_tolerance(self, model: str, tolerance: float,
+                            bucket: int) -> str:
+        """Tolerance tier router (§14): the cheapest SERVABLE tier whose
+        measured accuracy delta fits the request's tolerance (percentage
+        points vs fp32). Candidates: fp32 always (delta 0 by definition),
+        plus every tier with a MEASURED delta within tolerance that is
+        also servable right now (QuantGr ⇒ calibrated — the router never
+        selects a tier `_resolve_tier` would bounce, so the fallback
+        contract is preserved by construction, not by luck). Cost is the
+        latency bank's prediction at this bucket — measured EWMA when
+        samples exist, roofline seed otherwise; an unpredictable tier
+        ranks last. fp32 leads the candidate list, so a cost tie (e.g.
+        totally cold bank) degrades to the exact path."""
+        e = self.models[model]
+        cands = ["fp32"]
+        for tn in e.tiers:
+            if tn == "fp32":
+                continue
+            delta = e.accuracy_delta.get(tn)
+            if delta is None or abs(delta) > tolerance:
+                continue
+            if e.tiers[tn].quantgr and tn not in e.calibrations:
+                continue
+            cands.append(tn)
+
+        def cost(tn: str) -> float:
+            # MEASURED latencies trump seeds within a tier: once any of
+            # the tier's execution variants has real samples, an
+            # optimistic roofline seed on a sibling variant cannot mask a
+            # measured slowdown. Across tiers the comparison may still mix
+            # measured vs seed — that is the cold-start contract.
+            m_best, s_best = None, None
+            for key in self.bank.keys():
+                if key[0] != model or key[1] != bucket or key[2] != tn:
+                    continue
+                m = self.bank.measured(key)
+                if m is not None:
+                    m_best = m if m_best is None else min(m_best, m)
+                else:
+                    p = self.bank.predict(key)
+                    if p is not None:
+                        s_best = p if s_best is None else min(s_best, p)
+            if m_best is not None:
+                return m_best
+            return s_best if s_best is not None else float("inf")
+
+        return min(cands, key=lambda tn: (cost(tn), cands.index(tn)))
+
+    def _route_tier(self, model: str, tier: Optional[str],
+                    tolerance: Optional[float], bucket: int) -> str:
+        """Requested (tier, tolerance) -> served tier (§14). An explicit
+        tier is a contract: it resolves exactly as before (fallback
+        included) and tolerance/governor never override it. A tolerance
+        with no tier runs the tolerance router. Neither -> the governor
+        (when configured) may downgrade the model default; its pick still
+        flows through `_resolve_tier`, so an uncalibrated downgrade target
+        falls back to fp32, counted, instead of erroring."""
+        if tier is None and tolerance is not None:
+            tier = self._tier_for_tolerance(model, tolerance, bucket)
+        elif tier is None and self.governor is not None:
+            e = self.models[model]
+            tier = self.governor.tier_override(e.default_tier, list(e.tiers))
+        return self._resolve_tier(model, tier)
+
     def _resolve_fusion(self, model: str, fusion: Optional[str]) -> str:
         """Requested fusion mode -> served mode: model default when
         unspecified; an unknown name is a caller error (unlike tier
@@ -869,17 +1048,31 @@ class GraphServe:
         form (GCN's Â @ H today)."""
         return e.agg_backend != "dense" and e.cfg.kind == "gcn"
 
+    def _measured_agg_pair(self, model: str, capacity: int
+                           ) -> Tuple[Optional[float], Optional[float]]:
+        """Best MEASURED batch latency per agg backend at (model, bucket),
+        from the §14 latency bank — the hardware-in-the-loop input to
+        `select_agg_backend`. None on either side until that backend has
+        served a real dispatch here, which keeps the override inert (the
+        roofline decides) for cold paths."""
+        best = self.bank.measured_pair(
+            match=lambda k: k[0] == model and k[1] == capacity,
+            backend_of=lambda k: k[3])
+        return best.get("dense"), best.get("grasp")
+
     def _backend_from_stats(self, e: _ModelEntry, capacity: int,
                             stats: Dict) -> str:
         """Run the density/cost rule (DESIGN.md §10) for one graph at one
-        bucket. Pure decision — `backend_fallbacks` accounting happens
-        per REQUEST at the resolution sites (mirroring how
-        `tier_fallbacks` counts), never here, so cached decisions and
+        bucket, preferring MEASURED costs (§14) where both backends have
+        served here before. Pure decision — `backend_fallbacks`
+        accounting happens per REQUEST at the resolution sites (mirroring
+        how `tier_fallbacks` counts), never here, so cached decisions and
         fresh ones count identically."""
         mode = "grasp" if e.agg_backend == "grasp" else "auto"
         choice, _, _ = select_agg_backend(
             capacity, e.cfg.hidden, nnz_blocks=stats["nnz_blocks"],
-            max_row_nnz=stats["max_row_nnz"], mode=mode)
+            max_row_nnz=stats["max_row_nnz"], mode=mode,
+            measured=self._measured_agg_pair(e.name, capacity))
         return choice
 
     def _count_forced_fallback(self, e: _ModelEntry, backend: str) -> None:
@@ -976,18 +1169,23 @@ class GraphServe:
                  tier_resolved: bool = False,
                  backend: Optional[str] = None,
                  fusion: Optional[str] = None,
-                 submitted_s: Optional[float] = None) -> GNNRequest:
-        """Host-stage tail shared by every intake path: resolve the tier,
-        agg backend, and fusion mode, realize operands if the caller
-        didn't, assign the uid. Returns the ready-to-dispatch request WITHOUT touching the
+                 submitted_s: Optional[float] = None,
+                 deadline_ms: Optional[float] = None,
+                 tolerance: Optional[float] = None) -> GNNRequest:
+        """Host-stage tail shared by every intake path: resolve the tier
+        (router-aware, §14), agg backend, and fusion mode, realize
+        operands if the caller didn't, assign the uid. Returns the
+        ready-to-dispatch request WITHOUT touching the
         engine queue — the sync path pushes it (`_push`), the pipeline
         scheduler hands it to its own ready stage. `submitted_s` lets the
         scheduler pin latency accounting to intake time (queue wait
-        included) rather than to host-stage completion."""
-        now = time.perf_counter()
+        included) rather than to host-stage completion; `deadline_ms` is
+        RELATIVE to that same submit instant, so queue wait spends the
+        budget."""
+        now = self.clock.now()
         submitted_s = submitted_s if submitted_s is not None else now
         if not tier_resolved:
-            tier = self._resolve_tier(model, tier)
+            tier = self._route_tier(model, tier, tolerance, pg.capacity)
         fusion = self._resolve_fusion(model, fusion)
         if backend is None:
             backend, ops = self._resolve_and_build(model, tier, pg)
@@ -1005,10 +1203,13 @@ class GraphServe:
             self._uid += 1
             if self.metrics["first_submit_s"] is None:
                 self.metrics["first_submit_s"] = submitted_s
+        deadline_s = (submitted_s + deadline_ms * 1e-3
+                      if deadline_ms is not None else None)
         return GNNRequest(uid=uid, model=model, pg=pg, ops=ops,
                           bucket=pg.capacity, submitted_s=submitted_s,
                           tier=tier, backend=backend, fusion=fusion,
-                          tier_ops=tier_ops)
+                          tier_ops=tier_ops, deadline_s=deadline_s,
+                          tolerance=tolerance)
 
     def _push(self, req: GNNRequest) -> int:
         self.queue.append(req)
@@ -1017,18 +1218,27 @@ class GraphServe:
     def prepare_submit(self, g: Graph, *, model: str,
                        tier: Optional[str] = None,
                        fusion: Optional[str] = None,
-                       submitted_s: Optional[float] = None) -> GNNRequest:
+                       submitted_s: Optional[float] = None,
+                       deadline_ms: Optional[float] = None,
+                       tolerance: Optional[float] = None) -> GNNRequest:
         """HOST stage of a one-shot request: NodePad padding + operand
         build/packing. Scheduler-callable from any worker thread."""
         return self._prepare(model, self.sc.ladder.pad(g), tier=tier,
-                             fusion=fusion, submitted_s=submitted_s)
+                             fusion=fusion, submitted_s=submitted_s,
+                             deadline_ms=deadline_ms, tolerance=tolerance)
 
     def submit(self, g: Graph, *, model: str,
                tier: Optional[str] = None,
-               fusion: Optional[str] = None) -> int:
-        """One-shot inference request over a static graph."""
+               fusion: Optional[str] = None,
+               deadline_ms: Optional[float] = None,
+               tolerance: Optional[float] = None) -> int:
+        """One-shot inference request over a static graph. `deadline_ms`
+        (relative to now) and `tolerance` (max accuracy points traded by
+        the tier router) opt the request into the §14 SLO machinery."""
         return self._push(self.prepare_submit(g, model=model, tier=tier,
-                                              fusion=fusion))
+                                              fusion=fusion,
+                                              deadline_ms=deadline_ms,
+                                              tolerance=tolerance))
 
     def attach(self, g: Graph, *, model: str, calibrate: bool = True) -> int:
         """Register an evolving graph; returns a graph_id for update/query.
@@ -1399,7 +1609,9 @@ class GraphServe:
 
     def prepare_query(self, graph_id: int, *, tier: Optional[str] = None,
                       fusion: Optional[str] = None,
-                      submitted_s: Optional[float] = None) -> GNNRequest:
+                      submitted_s: Optional[float] = None,
+                      deadline_ms: Optional[float] = None,
+                      tolerance: Optional[float] = None) -> GNNRequest:
         """HOST stage of a query over an attached graph's current snapshot,
         optionally pinning a quality tier and/or fusion mode (model
         defaults otherwise).
@@ -1439,10 +1651,14 @@ class GraphServe:
                     "over (DESIGN.md §12)")
             return self._prepare_sharded(graph_id, model, pg, sharded,
                                          ver, tier=tier,
-                                         submitted_s=submitted_s)
+                                         submitted_s=submitted_s,
+                                         deadline_ms=deadline_ms,
+                                         tolerance=tolerance)
         if not self.sc.use_cacheg:
             return self._prepare(model, pg, tier=tier, fusion=fusion,
-                                 submitted_s=submitted_s)
+                                 submitted_s=submitted_s,
+                                 deadline_ms=deadline_ms,
+                                 tolerance=tolerance)
         key = (graph_id, ver)
         with self._lock:
             ops = self._cache.get("operand", key)
@@ -1471,7 +1687,7 @@ class GraphServe:
         else:
             self._count("operand_cache_hits")
         tops = None
-        resolved = self._resolve_tier(model, tier)
+        resolved = self._route_tier(model, tier, tolerance, pg.capacity)
         e = self.models[model]
         if self._needs_tier_ops(e, resolved):
             # derived-form hit path: the int8 Â is structure work too —
@@ -1505,12 +1721,15 @@ class GraphServe:
                 ops = dataclasses.replace(ops, block_sparse=bsp)
         return self._prepare(model, pg, ops, tier=resolved, tier_ops=tops,
                              tier_resolved=True, backend=backend,
-                             fusion=fusion, submitted_s=submitted_s)
+                             fusion=fusion, submitted_s=submitted_s,
+                             deadline_ms=deadline_ms, tolerance=tolerance)
 
     def _prepare_sharded(self, graph_id: int, model: str, pg: PaddedGraph,
                          sharded: Tuple[GraphShards, Graph], ver: int, *,
                          tier: Optional[str],
-                         submitted_s: Optional[float]) -> GNNRequest:
+                         submitted_s: Optional[float],
+                         deadline_ms: Optional[float] = None,
+                         tolerance: Optional[float] = None) -> GNNRequest:
         """HOST stage of a query over an auto-sharded graph (§12).
 
         The CacheG unit here is the tuple of per-shard `ShardSlice`s —
@@ -1528,7 +1747,7 @@ class GraphServe:
         mixing with unsharded ones."""
         part, g = sharded
         e = self.models[model]
-        resolved = self._resolve_tier(model, tier)
+        resolved = self._route_tier(model, tier, tolerance, part.shard_cap)
         key = (graph_id, ver)
         with self._lock:
             slices = self._cache.get("shard", key)
@@ -1546,24 +1765,31 @@ class GraphServe:
         else:
             self._count("operand_cache_hits")
         x, ops, mask = stack_shard_slices(slices)
-        now = time.perf_counter()
+        now = self.clock.now()
         submitted_s = submitted_s if submitted_s is not None else now
         with self._lock:
             uid = self._uid
             self._uid += 1
             if self.metrics["first_submit_s"] is None:
                 self.metrics["first_submit_s"] = submitted_s
+        deadline_s = (submitted_s + deadline_ms * 1e-3
+                      if deadline_ms is not None else None)
         return GNNRequest(uid=uid, model=model, pg=pg, ops=ops,
                           bucket=part.shard_cap, submitted_s=submitted_s,
                           tier=resolved, backend="dense", fusion="none",
                           shards=part.shards, part=part, shard_x=x,
-                          shard_mask=mask)
+                          shard_mask=mask, deadline_s=deadline_s,
+                          tolerance=tolerance)
 
     def query(self, graph_id: int, *, tier: Optional[str] = None,
-              fusion: Optional[str] = None) -> int:
+              fusion: Optional[str] = None,
+              deadline_ms: Optional[float] = None,
+              tolerance: Optional[float] = None) -> int:
         """Enqueue inference over an attached graph (see `prepare_query`)."""
         return self._push(self.prepare_query(graph_id, tier=tier,
-                                             fusion=fusion))
+                                             fusion=fusion,
+                                             deadline_ms=deadline_ms,
+                                             tolerance=tolerance))
 
     # --------------------------------------------------------------- execution
     def run(self) -> List[GNNRequest]:
@@ -1571,15 +1797,49 @@ class GraphServe:
             self._run_batch()
         return self.finished
 
+    def _complete_expired(self, expired: List[GNNRequest],
+                          now: float) -> None:
+        """Finish requests whose deadline passed BEFORE dispatch (§14):
+        they complete immediately with `deadline_missed=True` and no
+        predictions — an answer the caller can no longer use must not
+        occupy batch slots ahead of ones that still can. Counted per
+        request in `deadline_misses`; their (submit → expiry) latency
+        still feeds the metrics and the governor, because an expired
+        request IS the overload signal the governor exists to see."""
+        for r in expired:
+            r.done = True
+            r.deadline_missed = True
+            r.finished_s = now
+        with self._lock:
+            for r in expired:
+                self.metrics["latency_s"].append(now - r.submitted_s)
+                self.metrics["deadline_misses"] += 1
+                self.finished.append(r)
+                if self.governor is not None:
+                    self.governor.observe(now - r.submitted_s)
+            self.metrics["last_finish_s"] = now
+
     def _run_batch(self) -> None:
-        # best-filling key first (not queue[0]'s — see best_fill_key): a
-        # lone odd request at the head no longer forces a 1-of-N dispatch
+        # expiry sweep first (§14): requests already past their deadline
+        # complete flagged instead of wasting a dispatch
+        now = self.clock.now()
+        expired = [r for r in self.queue
+                   if r.deadline_s is not None and r.deadline_s <= now]
+        if expired:
+            gone = {r.uid for r in expired}
+            self.queue = [r for r in self.queue if r.uid not in gone]
+            self._complete_expired(expired, now)
+            if not self.queue:
+                return
+        # best-filling key first (not queue[0]'s — see best_fill_key), with
+        # slack as the fill tie-break (edf_best_fill_key): a lone odd
+        # request at the head no longer forces a 1-of-N dispatch
         # while fully-fillable keys wait behind it. Tier, agg backend AND
         # fusion mode are part of the batch key: all three select
         # different compiled plans, so a slot can never mix execution
         # variants.
-        key = best_fill_key(pending_stats(self.queue), self.sc.batch_slots,
-                            self._last_dispatch)
+        key = edf_best_fill_key(edf_pending_stats(self.queue, now),
+                                self.sc.batch_slots, self._last_dispatch)
         take = 1 if key[5] else self.sc.batch_slots   # sharded: width-1
         batch = [r for r in self.queue
                  if (r.model, r.bucket, r.tier, r.backend, r.fusion,
@@ -1614,7 +1874,9 @@ class GraphServe:
             self._execute_sharded(head)
             return
         b = self.sc.batch_slots
-        t0 = time.perf_counter()
+        bkey = (head.model, head.bucket, head.tier, head.backend,
+                head.fusion, 0)
+        t0 = self.clock.now()
         # fixed batch width: junk slots repeat a real request, outputs dropped
         slots = batch + [batch[-1]] * (b - len(batch))
         e = self.models[head.model]
@@ -1633,7 +1895,10 @@ class GraphServe:
         # blob keeps whatever lowering it was traced with
         ran_dense_fallback = plan.grasp_ref_fallback
 
-        now = time.perf_counter()
+        # §14: fake clocks advance scripted per-key latency here — between
+        # the dispatch timestamps — so batch cost is a test input
+        self.clock.on_batch(bkey)
+        now = self.clock.now()
         host_logits = np.asarray(logits)
         for i, r in enumerate(batch):
             lg = host_logits[i, : r.pg.num_nodes]
@@ -1642,10 +1907,21 @@ class GraphServe:
                 r.logits = lg
             r.done = True
             r.finished_s = now
+            if r.deadline_s is not None and now > r.deadline_s:
+                # executed but late (§14): the answer is delivered, the
+                # breach is flagged — distinct from pre-dispatch expiry,
+                # where preds stay None
+                r.deadline_missed = True
         with self._lock:
+            self.bank.observe(bkey, now - t0)
             for r in batch:
-                self.metrics["latency_s"].append(now - r.submitted_s)
+                lat = now - r.submitted_s
+                self.metrics["latency_s"].append(lat)
                 self.finished.append(r)
+                if r.deadline_missed:
+                    self.metrics["deadline_misses"] += 1
+                if self.governor is not None:
+                    self.governor.observe(lat)
             self.metrics["batches"] += 1
             self.metrics["slots_filled"] += len(batch)
             self.metrics["slots_total"] += b
@@ -1683,23 +1959,33 @@ class GraphServe:
         (`unshard_logits`). Collective bytes are accounted both ways —
         what the compressed wire moved and what exact fp32 would have —
         so the compression win is a metric, not a claim."""
-        t0 = time.perf_counter()
+        bkey = (r.model, r.bucket, r.tier, "dense", "none", r.shards)
+        t0 = self.clock.now()
         e = self.models[r.model]
         plan = self.plan_for(r.model, r.bucket, r.tier, shards=r.shards)
         logits = plan(e.params, r.shard_x, r.ops,
                       e.calibrations.get(r.tier), node_mask=r.shard_mask)
         logits.block_until_ready()
-        now = time.perf_counter()
+        self.clock.on_batch(bkey)
+        now = self.clock.now()
         lg = unshard_logits(logits, r.part)
         r.preds = lg.argmax(axis=-1).astype(np.int32)
         if self.sc.return_logits:
             r.logits = lg
         r.done = True
         r.finished_s = now
+        if r.deadline_s is not None and now > r.deadline_s:
+            r.deadline_missed = True
         comp, exact = self._halo_bytes(e.cfg, r.part)
         with self._lock:
-            self.metrics["latency_s"].append(now - r.submitted_s)
+            self.bank.observe(bkey, now - t0)
+            lat = now - r.submitted_s
+            self.metrics["latency_s"].append(lat)
             self.finished.append(r)
+            if r.deadline_missed:
+                self.metrics["deadline_misses"] += 1
+            if self.governor is not None:
+                self.governor.observe(lat)
             self.metrics["batches"] += 1
             self.metrics["slots_filled"] += 1
             self.metrics["slots_total"] += 1
@@ -1808,6 +2094,19 @@ class GraphServe:
                 self.metrics["cache_admission_rejects"],
             "delta_updates": self.metrics["delta_updates"],
             "delta_fallbacks": self.metrics["delta_fallbacks"],
+            # §14 SLO loop: deadline outcomes, governor decisions, and the
+            # measured-vs-modelled drift of the latency bank (mean
+            # EWMA/seed ratio over keys with both — the signal that the
+            # roofline mispriced a path, e.g. the BENCH grasp inversion)
+            "deadline_misses": self.metrics["deadline_misses"],
+            "shed_requests": self.metrics["shed_requests"],
+            "slo_downgrades": (self.governor.downgrades
+                               if self.governor is not None else 0),
+            "slo_upgrades": (self.governor.upgrades
+                             if self.governor is not None else 0),
+            "slo_level": (self.governor.level
+                          if self.governor is not None else 0),
+            "ewma_vs_model": self.bank.ewma_vs_model(),
             "tiers": self.tier_summary(),
             "accuracy_delta_vs_fp32": {
                 name: dict(e.accuracy_delta)

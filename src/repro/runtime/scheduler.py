@@ -63,7 +63,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.graph import Graph
 
-from .gnn_server import (BatchKey, GNNRequest, GraphServe, best_fill_key)
+from .gnn_server import (BatchKey, GNNRequest, GraphServe, edf_best_fill_key)
 
 
 class QueueFull(RuntimeError):
@@ -101,6 +101,8 @@ class _Work:
     graph_id: Optional[int] = None
     tier: Optional[str] = None
     fusion: Optional[str] = None
+    deadline_ms: Optional[float] = None   # §14: relative to submitted_s
+    tolerance: Optional[float] = None     # §14: tier-router budget (points)
 
 
 # One ready-buffer entry: (arrival serial, arrival time, request). The
@@ -155,25 +157,44 @@ class PipelineScheduler:
     # ------------------------------------------------------------- intake
     def submit(self, g: Graph, *, model: str,
                tier: Optional[str] = None,
-               fusion: Optional[str] = None) -> int:
-        """Enqueue a one-shot request; returns a ticket (see `drain`)."""
+               fusion: Optional[str] = None,
+               deadline_ms: Optional[float] = None,
+               tolerance: Optional[float] = None) -> int:
+        """Enqueue a one-shot request; returns a ticket (see `drain`).
+        `deadline_ms`/`tolerance` opt into the §14 SLO machinery — the
+        deadline budget starts HERE, so intake queue wait spends it."""
         return self._accept(_Work(ticket=-1, kind="submit",
-                                  submitted_s=time.perf_counter(),
+                                  submitted_s=self.engine.clock.now(),
                                   model=model, graph=g, tier=tier,
-                                  fusion=fusion))
+                                  fusion=fusion, deadline_ms=deadline_ms,
+                                  tolerance=tolerance))
 
     def query(self, graph_id: int, *, tier: Optional[str] = None,
-              fusion: Optional[str] = None) -> int:
+              fusion: Optional[str] = None,
+              deadline_ms: Optional[float] = None,
+              tolerance: Optional[float] = None) -> int:
         """Enqueue a query over an attached graph; returns a ticket."""
         return self._accept(_Work(ticket=-1, kind="query",
-                                  submitted_s=time.perf_counter(),
+                                  submitted_s=self.engine.clock.now(),
                                   graph_id=graph_id, tier=tier,
-                                  fusion=fusion))
+                                  fusion=fusion, deadline_ms=deadline_ms,
+                                  tolerance=tolerance))
 
     def _accept(self, w: _Work) -> int:
+        gov = self.engine.governor
         with self._cond:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
+            if gov is not None and gov.should_shed(len(self._pending)):
+                # §14 governor shed: quality is already at the floor and
+                # the queue keeps growing — drop through the existing
+                # reject path regardless of the backpressure mode, counted
+                # on both the scheduler and the engine
+                self.metrics["rejected"] += 1
+                self.engine._count("shed_requests")
+                raise QueueFull(
+                    f"SLO governor shedding at queue depth "
+                    f"{len(self._pending)} (level {gov.level})")
             if len(self._pending) >= self.pc.max_pending:
                 if self.pc.backpressure == "reject":
                     self.metrics["rejected"] += 1
@@ -203,10 +224,14 @@ class PipelineScheduler:
         if w.kind == "submit":
             return self.engine.prepare_submit(w.graph, model=w.model,
                                               tier=w.tier, fusion=w.fusion,
-                                              submitted_s=w.submitted_s)
+                                              submitted_s=w.submitted_s,
+                                              deadline_ms=w.deadline_ms,
+                                              tolerance=w.tolerance)
         return self.engine.prepare_query(w.graph_id, tier=w.tier,
                                          fusion=w.fusion,
-                                         submitted_s=w.submitted_s)
+                                         submitted_s=w.submitted_s,
+                                         deadline_ms=w.deadline_ms,
+                                         tolerance=w.tolerance)
 
     def _host_loop(self) -> None:
         while True:
@@ -243,16 +268,51 @@ class PipelineScheduler:
         key = (req.model, req.bucket, req.tier, req.backend, req.fusion,
                req.shards)
         self._ready.setdefault(key, deque()).append(
-            (self._arrival_serial, time.perf_counter(), req))
+            (self._arrival_serial, self.engine.clock.now(), req))
         self._arrival_serial += 1
         self._ready_count += 1
         self._results[ticket] = req
 
     # ------------------------------------------------------- device stage
+    def _expire_ready_locked(self) -> int:
+        """§14 expiry sweep over the ready buffer: requests whose deadline
+        already passed complete flagged (engine `_complete_expired` —
+        `deadline_missed=True`, no preds) instead of occupying batch
+        slots. Returns how many were swept; callers re-check the ready
+        count afterwards. Runs under `_cond`; the engine call takes the
+        engine lock, which is always safe in this order (never the
+        reverse)."""
+        now = self.engine.clock.now()
+        expired: List[GNNRequest] = []
+        for key in list(self._ready):
+            q = self._ready[key]
+            keep = deque(item for item in q
+                         if not (item[2].deadline_s is not None
+                                 and item[2].deadline_s <= now))
+            if len(keep) != len(q):
+                expired.extend(item[2] for item in q
+                               if item[2].deadline_s is not None
+                               and item[2].deadline_s <= now)
+                if keep:
+                    self._ready[key] = keep
+                else:
+                    del self._ready[key]
+        if expired:
+            self._ready_count -= len(expired)
+            self.engine._complete_expired(expired, now)
+            self.metrics["completed"] += len(expired)
+        return len(expired)
+
     def _select_locked(self) -> BatchKey:
-        stats = {k: (len(q), q[0][0]) for k, q in self._ready.items()}
-        return best_fill_key(stats, self.engine.sc.batch_slots,
-                             self.engine._last_dispatch)
+        now = self.engine.clock.now()
+        stats = {}
+        for k, q in self._ready.items():
+            slack = min((item[2].deadline_s - now
+                         if item[2].deadline_s is not None else float("inf"))
+                        for item in q)
+            stats[k] = (len(q), q[0][0], slack)
+        return edf_best_fill_key(stats, self.engine.sc.batch_slots,
+                                 self.engine._last_dispatch)
 
     def _take_locked(self, key: BatchKey) -> List[GNNRequest]:
         q = self._ready[key]
@@ -278,6 +338,11 @@ class PipelineScheduler:
                             return
                         self._cond.wait()        # device idle: nothing ready
                         continue
+                    if self._expire_ready_locked():
+                        # §14: expired requests completed without a
+                        # dispatch — ready space freed, re-evaluate
+                        self._cond.notify_all()
+                        continue
                     key = self._select_locked()
                     fill = len(self._ready[key])
                     unready = len(self._pending) + self._inflight_host
@@ -286,7 +351,7 @@ class PipelineScheduler:
                         # stage — wait (bounded by the key's oldest arrival
                         # + window) for a fuller batch before going partial
                         deadline = self._ready[key][0][1] + window_s
-                        now = time.perf_counter()
+                        now = self.engine.clock.now()
                         if now < deadline:
                             self._cond.wait(deadline - now)
                             continue
@@ -309,6 +374,8 @@ class PipelineScheduler:
             self.metrics["host_busy_s"] += time.perf_counter() - t0
             self._push_ready_locked(w.ticket, req)
             return
+        if self._ready_count:
+            self._expire_ready_locked()          # §14 sweep before select
         if self._ready_count:
             batch = self._take_locked(self._select_locked())
             self.engine._execute_batch(batch)

@@ -1,0 +1,112 @@
+"""SLO governor: rolling-p99 watcher with hysteresis (DESIGN.md §14).
+
+The governor closes GraNNite's quality-for-latency dial from the serving
+side: it watches the rolling request latency p99 (and the intake queue
+depth) against a configured target and, when the target is breached for
+`breach_checks` consecutive observations, steps the DEFAULT quality tier
+one rung down the ladder (fp32 → int8 → int8+grax).  When the breach
+clears for `clear_checks` consecutive observations it steps back up.
+The asymmetric check counts are the hysteresis: a single slow batch
+cannot flip the tier, and a single fast one cannot flip it back, so the
+system never oscillates on measurement noise.
+
+At the bottom rung the governor has no quality left to trade; when the
+queue depth ALSO exceeds `max_queue_depth` it asks the intake path to
+shed load (`should_shed`), which the pipeline scheduler turns into the
+existing reject/QueueFull path.
+
+The governor only steers requests that pinned NEITHER a tier NOR a
+tolerance — an explicit request is a contract the governor never
+overrides.  All of its state advances in `observe()`, which the engine
+calls once per completed request under the engine lock with
+clock-derived latencies, so a fake clock drives the whole cycle
+deterministically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SLOConfig:
+    target_p99_ms: float = 50.0      # rolling-p99 latency target
+    window: int = 64                 # rolling window size (requests)
+    min_samples: int = 4             # no verdicts before this many samples
+    breach_checks: int = 3           # consecutive breaches -> downgrade
+    clear_checks: int = 6            # consecutive clears -> upgrade
+    max_queue_depth: int = 64        # shed threshold at the bottom rung
+    # quality-descending tier ladder the governor walks; intersected with
+    # each model's registered tiers at override time
+    ladder: Tuple[str, ...] = ("fp32", "int8", "int8+grax")
+
+
+class SLOGovernor:
+    """Hysteretic tier-downgrade controller over a rolling latency window."""
+
+    def __init__(self, cfg: Optional[SLOConfig] = None):
+        self.cfg = cfg or SLOConfig()
+        self._lat: deque = deque(maxlen=self.cfg.window)
+        self.level = 0                   # rungs below the default tier
+        self.downgrades = 0              # level-raise transitions (counted)
+        self.upgrades = 0                # level-drop transitions
+        self._breach_streak = 0
+        self._clear_streak = 0
+
+    @property
+    def max_level(self) -> int:
+        return len(self.cfg.ladder) - 1
+
+    def p99_ms(self) -> Optional[float]:
+        if len(self._lat) < self.cfg.min_samples:
+            return None
+        return float(np.percentile(np.asarray(self._lat), 99) * 1e3)
+
+    def observe(self, latency_s: float) -> None:
+        """Feed one completed-request latency; run the hysteresis step."""
+        self._lat.append(float(latency_s))
+        p99 = self.p99_ms()
+        if p99 is None:
+            return
+        if p99 > self.cfg.target_p99_ms:
+            self._breach_streak += 1
+            self._clear_streak = 0
+            if (self._breach_streak >= self.cfg.breach_checks
+                    and self.level < self.max_level):
+                self.level += 1
+                self.downgrades += 1
+                self._breach_streak = 0
+        else:
+            self._clear_streak += 1
+            self._breach_streak = 0
+            if (self._clear_streak >= self.cfg.clear_checks
+                    and self.level > 0):
+                self.level -= 1
+                self.upgrades += 1
+                self._clear_streak = 0
+
+    def tier_override(self, default_tier: str,
+                      registered: Sequence[str]) -> Optional[str]:
+        """Tier to serve a no-preference request at the current level.
+
+        None at level 0 (serve the model default).  Otherwise walk the
+        configured ladder, restricted to tiers the model actually
+        registered, `level` rungs below the default.  Saturates at the
+        bottom rung — beyond that the only lever left is shedding.
+        """
+        if self.level == 0:
+            return None
+        ladder: List[str] = [t for t in self.cfg.ladder if t in registered]
+        if not ladder:
+            return None
+        start = ladder.index(default_tier) if default_tier in ladder else 0
+        return ladder[min(start + self.level, len(ladder) - 1)]
+
+    def should_shed(self, queue_depth: int) -> bool:
+        """True when quality is exhausted AND the queue keeps growing."""
+        return (self.level >= self.max_level
+                and queue_depth >= self.cfg.max_queue_depth)

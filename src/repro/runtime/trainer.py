@@ -37,6 +37,7 @@ from repro.nn import lm
 from repro.nn.config import ArchConfig
 from repro.optim.adamw import (adamw_init, adamw_update, clip_by_global_norm,
                                linear_warmup_cosine)
+from repro.runtime.ewma import StragglerGate
 
 
 @dataclasses.dataclass
@@ -154,7 +155,10 @@ class Trainer:
         self.failure_injector = failure_injector
         self.history: List[StepRecord] = []
         self.restarts = 0
-        self._ewma: Optional[float] = None
+        # Shared bias-corrected EWMA owner (runtime/ewma.py): the old
+        # inline `ewma = wall if ewma is None else ...` seeded the
+        # baseline with the compile-heavy first step at weight 1.0.
+        self._straggler = StragglerGate(tc.straggler_factor, alpha=0.1)
 
     # -- fault-tolerance plumbing ------------------------------------------
     def _state_tree(self):
@@ -208,13 +212,9 @@ class Trainer:
                 self.params, self.opt, batch, jnp.asarray(self.step))
             loss = float(metrics["loss"])
             wall = time.perf_counter() - t0
-            straggler = False
-            if self._ewma is not None and wall > self.tc.straggler_factor * self._ewma:
-                straggler = True   # on a pod: report to the job manager
-            # EWMA updated with non-straggler steps only (robust baseline)
-            if not straggler:
-                self._ewma = wall if self._ewma is None else (
-                    0.9 * self._ewma + 0.1 * wall)
+            # on a pod: a straggler step is reported to the job manager.
+            # The gate excludes stragglers from its own baseline.
+            straggler = self._straggler.check(wall)
             self.history.append(StepRecord(self.step, loss, wall, straggler))
             self.step += 1
             self._save()

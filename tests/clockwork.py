@@ -1,0 +1,74 @@
+"""FakeClock: deterministic virtual time for the §14 SLO serving tests.
+
+Injected into `GraphServe(clock=...)`, it replaces every timestamp,
+deadline comparison, and latency sample in the serving path with virtual
+time that only moves when a test says so:
+
+  * `advance(seconds)` — move time forward manually (e.g. "the request
+    sat in the queue for 40 ms").
+  * scripted per-batch latencies — `script(key_match, seconds)` registers
+    what a dispatch under a batch key "costs"; the engine calls
+    `on_batch(key)` between its dispatch timestamps, and the fake clock
+    advances by the scripted figure, so measured batch latency becomes a
+    test INPUT. `default_batch_s` covers unscripted keys.
+
+No real sleeping happens anywhere: tests drive the engine's sync path or
+the scheduler's deterministic inline mode, and assertions compare virtual
+timestamps. That is the zero-`time.sleep` contract ISSUE 9 pins.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.runtime.clock import Clock  # noqa: E402
+
+
+class FakeClock(Clock):
+    def __init__(self, start: float = 0.0, default_batch_s: float = 0.0):
+        self._now = float(start)
+        self.default_batch_s = float(default_batch_s)
+        # (predicate over BatchKey, seconds) — first match wins
+        self._scripts: List[Tuple[Callable, float]] = []
+        self.batch_log: List[Tuple[tuple, float]] = []   # (key, cost) seen
+
+    # -------------------------------------------------------------- Clock
+    def now(self) -> float:
+        return self._now
+
+    def sleep(self, seconds: float) -> None:
+        self.advance(seconds)
+
+    def on_batch(self, key, span=None) -> None:
+        cost = self.default_batch_s
+        for pred, seconds in self._scripts:
+            if pred(key):
+                cost = seconds
+                break
+        self.batch_log.append((tuple(key), cost))
+        self._now += cost
+
+    # ----------------------------------------------------------- controls
+    def advance(self, seconds: float) -> None:
+        assert seconds >= 0, "virtual time cannot rewind"
+        self._now += float(seconds)
+
+    def script(self, match, seconds: float) -> None:
+        """Register a per-batch latency. `match` is a predicate over the
+        BatchKey tuple, or a dict of {index: value} the key must agree
+        with (e.g. {2: "int8"} scripts every int8 dispatch)."""
+        if isinstance(match, dict):
+            items = tuple(match.items())
+
+            def pred(key, _items=items):
+                return all(key[i] == v for i, v in _items)
+        else:
+            pred = match
+        # newest script wins: tests re-script a key mid-run to model a
+        # path getting slower/faster
+        self._scripts.insert(0, (pred, float(seconds)))

@@ -468,6 +468,132 @@ def _budgeted_engine():
     return _BUDGETED["eng"]
 
 
+# ------------------------------------- §14 SLO serving under a fake clock
+
+
+@st.composite
+def slo_traffic(draw):
+    k = draw(st.integers(1, 6))
+    return [(draw(st.integers(10, 200)),                 # num_nodes
+             draw(st.integers(0, 2 ** 16)),              # graph seed
+             draw(st.sampled_from((None, 0.0, 5.0, 1e6))),  # deadline_ms
+             draw(st.floats(0.0, 0.02)))                 # inter-arrival gap s
+            for _ in range(k)]
+
+
+@given(slo_traffic())
+def test_every_request_completes_exactly_once_with_deadline_flag(reqs):
+    """§14 liveness: under ANY mix of deadlines (none / already-expired /
+    tight / loose) and arrival gaps on a virtual clock, every accepted
+    request completes EXACTLY once, `deadline_missed` is always a bool,
+    dropped answers happen only on missed deadlines, deadline-free requests
+    can never be flagged, and nothing recompiles."""
+    from clockwork import FakeClock
+    eng = _engine("gcn")
+    clk = FakeClock(default_batch_s=1e-3)
+    eng.clock = clk
+    with eng.scheduler(PipelineConfig(deterministic=True)) as sched:
+        for n, seed, deadline_ms, gap in reqs:
+            sched.submit(_graph(n, seed), model="gcn",
+                         deadline_ms=deadline_ms)
+            clk.advance(gap)
+        out = sched.drain()
+    assert len(out) == len(reqs)
+    assert len({r.uid for r in out}) == len(reqs)        # exactly once
+    for r, (_, _, deadline_ms, _) in zip(out, reqs):
+        assert r.done and r.deadline_missed in (True, False)
+        if r.preds is None:
+            assert r.deadline_missed                     # drops ⇒ missed
+        if deadline_ms is None:
+            assert not r.deadline_missed and r.preds is not None
+        if deadline_ms == 1e6:
+            assert not r.deadline_missed                 # loose never misses
+    eng.assert_warm()
+
+
+@given(st.lists(st.floats(1e-6, 1e3), min_size=1, max_size=30),
+       st.floats(0.01, 0.99),
+       st.one_of(st.none(), st.floats(1e-9, 1e6)))
+def test_latency_bank_prediction_bounded_by_samples(xs, alpha, seed):
+    """§14 bank invariant: however wrong the roofline seed is, once a key
+    has samples its prediction is a convex combination of them — always
+    within [min, max] of what was observed, seed excluded by construction."""
+    from repro.runtime.ewma import LatencyBank
+    bank = LatencyBank(alpha=alpha)
+    key = ("m", 128, "fp32", "dense", "none", 0)
+    if seed is not None:
+        bank.seed(key, seed)
+        assert bank.predict(key) == seed                 # cold: seed verbatim
+    for i, x in enumerate(xs):
+        bank.observe(key, x)
+        p = bank.predict(key)
+        assert min(xs[: i + 1]) <= p <= max(xs[: i + 1])
+    assert bank.samples(key) == len(xs)
+
+
+_ROUTER = {}
+
+
+@st.composite
+def router_state(draw):
+    tiers = [t for t in STANDARD_TIERS if t != "fp32"]
+    return (draw(st.floats(0.0, 10.0)),                  # tolerance
+            {t: draw(st.one_of(st.none(), st.floats(-8.0, 8.0)))
+             for t in tiers},                            # accuracy deltas
+            {t: draw(st.booleans()) for t in tiers},     # calibrated?
+            [(draw(st.sampled_from(STANDARD_TIERS)),
+              draw(st.floats(1e-7, 1e-2)),
+              draw(st.booleans()))                       # measured vs seed
+             for _ in range(draw(st.integers(0, 6)))])
+
+
+@given(router_state())
+def test_tier_router_never_selects_unservable_tier(state):
+    """§14 router safety: whatever the (delta, calibration, bank) state,
+    the tolerance router returns a tier that is servable RIGHT NOW — its
+    measured delta fits the tolerance and QuantGr tiers are calibrated —
+    so `_resolve_tier` passes it through without the fp32 fallback."""
+    tolerance, deltas, calibrated, costs = state
+    if "eng" not in _ROUTER:
+        # router-only engine: never warmed, never dispatched — the router
+        # reads registry + bank state only, so no compile sweep is needed
+        eng = GraphServe(GraphServeConfig(
+            ladder=BucketLadder(buckets=BUCKETS), batch_slots=3))
+        eng.register_model("gcn", GNNConfig(
+            kind="gcn", in_feats=IN_FEATS, hidden=8, num_classes=CLASSES),
+            tiers=STANDARD_TIERS)
+        _ROUTER["eng"] = eng
+    eng = _ROUTER["eng"]
+    from repro.runtime.ewma import LatencyBank
+    e = eng.models["gcn"]
+    e.accuracy_delta.clear()
+    e.calibrations.clear()
+    eng.bank = LatencyBank()
+    for t, d in deltas.items():
+        if d is not None:
+            e.accuracy_delta[t] = d
+    for t, c in calibrated.items():
+        if c:
+            e.calibrations[t] = {}
+    for t, cost, measured in costs:
+        key = ("gcn", 128, t, "dense", "none", 0)
+        if measured:
+            eng.bank.observe(key, cost)
+        else:
+            eng.bank.seed(key, cost)
+    pick = eng._tier_for_tolerance("gcn", tolerance, 128)
+    if pick != "fp32":
+        assert abs(e.accuracy_delta[pick]) <= tolerance
+        if e.tiers[pick].quantgr:
+            assert pick in e.calibrations
+    fallbacks = eng.metrics["tier_fallbacks"]
+    assert eng._resolve_tier("gcn", pick) == pick        # servable as-is
+    assert eng.metrics["tier_fallbacks"] == fallbacks
+
+
+# --------------------------------- §13 byte-accounting under interleavings
+
+
 @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 3),
                           st.integers(0, 2 ** 10)),
                 min_size=1, max_size=12))

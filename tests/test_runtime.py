@@ -112,7 +112,8 @@ def test_straggler_detection():
         if calls["n"] == 5:
             # sleep relative to the observed EWMA so the drill works no
             # matter how slow compilation made the first steps
-            _time.sleep(max(0.2, 4.0 * (tr._ewma or 0.0)))
+            base = tr._straggler.baseline or 0.0
+            _time.sleep(max(0.2, 4.0 * base))
         return orig(*a, **k)
 
     tr.train_step = slow_step

@@ -1,0 +1,603 @@
+"""SLO-aware serving (DESIGN.md §14), proven under a deterministic virtual
+clock: slack-aware EDF dispatch, deadline expiry/late flagging, the
+bias-corrected EWMA + latency bank, measured-latency backend routing (the
+BENCH grasp regression, pinned), the tolerance tier router, and the
+governor's downgrade/shed cycle. Every timing assertion reads the injected
+`FakeClock` — zero `time.sleep` anywhere in this file. Tier-1."""
+import numpy as np
+import pytest
+
+from clockwork import FakeClock
+
+from repro.core.graph import BucketLadder
+from repro.core.models import GNNConfig
+from repro.core.sparsity import select_agg_backend
+from repro.data.graphs import planetoid_like
+from repro.runtime.ewma import Ewma, LatencyBank, StragglerGate
+from repro.runtime.gnn_server import (GraphServe, GraphServeConfig,
+                                      best_fill_key, edf_best_fill_key,
+                                      edf_pending_stats, pending_stats)
+from repro.runtime.scheduler import (PipelineConfig, PipelineScheduler,
+                                     QueueFull)
+from repro.runtime.slo import SLOConfig, SLOGovernor
+
+IN_FEATS, CLASSES = 16, 4
+BUCKETS = (128, 256)
+INF = float("inf")
+
+
+def _graph(n, seed=0):
+    return planetoid_like(num_nodes=n, num_edges=3 * n, num_feats=IN_FEATS,
+                          num_classes=CLASSES, seed=seed, train_per_class=2)
+
+
+def _cfg(kind):
+    return GNNConfig(kind=kind, in_feats=IN_FEATS, hidden=16,
+                     num_classes=CLASSES, heads=4)
+
+
+# Warm engines are expensive; build each flavor once and give every test a
+# FRESH FakeClock (timestamps/metrics of earlier tests never leak into
+# virtual-time assertions, which always diff against per-test snapshots).
+_ENGINES = {}
+
+
+def _engine(name):
+    if name in _ENGINES:
+        return _ENGINES[name]
+    sc = GraphServeConfig(ladder=BucketLadder(buckets=BUCKETS),
+                          batch_slots=2, return_logits=True)
+    if name == "plain":            # gcn+gat, fp32 only — EDF/expiry tests
+        eng = GraphServe(sc, seed=0, clock=FakeClock())
+        eng.register_model("gcn", _cfg("gcn"))
+        eng.register_model("gat", _cfg("gat"))
+    elif name == "tiers":          # full ladder + auto agg — routing tests
+        eng = GraphServe(sc, seed=0, clock=FakeClock())
+        eng.register_model("gcn", _cfg("gcn"),
+                           tiers=("fp32", "int8", "int8+grax"),
+                           agg_backend="auto")
+    elif name == "governed":       # fp32/int8 + an SLO governor
+        slo = SLOConfig(target_p99_ms=10.0, window=2, min_samples=1,
+                        breach_checks=2, clear_checks=2, max_queue_depth=2,
+                        ladder=("fp32", "int8"))
+        eng = GraphServe(sc, seed=0, clock=FakeClock(), slo=slo)
+        eng.register_model("gcn", _cfg("gcn"), tiers=("fp32", "int8"))
+    elif name == "solo":           # gcn fp32 only — EWMA convergence
+        eng = GraphServe(sc, seed=0, clock=FakeClock())
+        eng.register_model("gcn", _cfg("gcn"))
+    eng.warmup()
+    if name in ("tiers", "governed"):
+        eng.calibrate("gcn", _graph(60, seed=9))
+    _ENGINES[name] = eng
+    return eng
+
+
+def _fresh_clock(eng, **kw):
+    clk = FakeClock(**kw)
+    eng.clock = clk
+    return clk
+
+
+def _reset_governor(gov):
+    gov.level = 0
+    gov.downgrades = 0
+    gov.upgrades = 0
+    gov._breach_streak = 0
+    gov._clear_streak = 0
+    gov._lat.clear()
+
+
+def _by_uid(eng, uid):
+    return next(r for r in eng.finished if r.uid == uid)
+
+
+# ------------------------------------------------------------ EDF dispatch
+
+
+def test_edf_best_fill_key_fill_then_slack_then_fairness_then_fifo():
+    slots = 2
+    ka = ("a", 128, "fp32", "dense", "none", 0)
+    kb = ("b", 128, "fp32", "dense", "none", 0)
+    # 1. fill dominates slack: a full batch beats a tighter lone request
+    stats = {ka: (2, 1, 10.0), kb: (1, 0, 0.001)}
+    assert edf_best_fill_key(stats, slots) == ka
+    # 2. slack breaks fill ties — even against the FIFO-older key
+    stats = {ka: (2, 0, 10.0), kb: (2, 1, 0.001)}
+    assert edf_best_fill_key(stats, slots) == kb
+    # 3. fairness breaks slack ties (least-recently dispatched model first)
+    stats = {ka: (2, 0, INF), kb: (2, 1, INF)}
+    assert edf_best_fill_key(stats, slots, {"a": 5, "b": 1}) == kb
+    # 4. FIFO last
+    assert edf_best_fill_key(stats, slots) == ka
+
+
+def test_edf_matches_best_fill_when_no_deadlines():
+    """Deadline-free traffic batches exactly as before: all slacks are +inf
+    and the legacy (fill, fairness, FIFO) rules decide."""
+    slots = 3
+    stats2 = {("a", 128, "fp32", "dense", "none", 0): (1, 0),
+              ("b", 128, "fp32", "dense", "none", 0): (3, 1),
+              ("c", 256, "fp32", "grasp", "layer", 0): (5, 2)}
+    stats3 = {k: (c, h, INF) for k, (c, h) in stats2.items()}
+    for last in ({}, {"b": 7}, {"b": 1, "c": 2}, {"a": 3}):
+        assert (edf_best_fill_key(stats3, slots, dict(last))
+                == best_fill_key(stats2, slots, dict(last)))
+
+
+def test_edf_pending_stats_tracks_min_slack():
+    eng = _engine("plain")
+    clk = _fresh_clock(eng)
+    eng.submit(_graph(40, 0), model="gcn", deadline_ms=50.0)
+    eng.submit(_graph(41, 1), model="gcn", deadline_ms=5.0)
+    eng.submit(_graph(42, 2), model="gat")
+    stats = edf_pending_stats(eng.queue, clk.now())
+    gcn_key = ("gcn", 128, "fp32", "dense", "none", 0)
+    gat_key = ("gat", 128, "fp32", "dense", "none", 0)
+    count, head, slack = stats[gcn_key]
+    assert (count, head) == (2, 0)
+    assert slack == pytest.approx(0.005)       # the TIGHTEST of the two
+    assert stats[gat_key][2] == INF            # no deadline -> +inf
+    eng.run()
+
+
+def test_edf_beats_fifo_on_slack_inversion():
+    """The crafted inversion: deadline-free gat arrives FIRST, a full batch
+    of tight-deadline gcn arrives second. The legacy rule dispatches gat
+    (FIFO); EDF dispatches gcn — same fill, tighter slack."""
+    eng = _engine("plain")
+    clk = _fresh_clock(eng)
+    for i in range(2):
+        eng.submit(_graph(40 + i, i), model="gat")
+    for i in range(2):
+        eng.submit(_graph(50 + i, i), model="gcn", deadline_ms=5.0)
+    old = best_fill_key(pending_stats(eng.queue), 2)
+    new = edf_best_fill_key(edf_pending_stats(eng.queue, clk.now()), 2)
+    assert old[0] == "gat" and new[0] == "gcn"   # the differential, pinned
+    n0 = len(eng.finished)
+    eng.run()
+    assert [r.model for r in eng.finished[n0:]] == ["gcn", "gcn",
+                                                    "gat", "gat"]
+    assert all(not r.deadline_missed for r in eng.finished[n0:])
+
+
+def test_scheduler_dispatches_edf_order():
+    eng = _engine("plain")
+    _fresh_clock(eng)
+    sched = PipelineScheduler(eng, PipelineConfig(deterministic=True))
+    for i in range(2):
+        sched.submit(_graph(40 + i, i), model="gat")
+    for i in range(2):
+        sched.submit(_graph(50 + i, i), model="gcn", deadline_ms=5.0)
+    n0 = len(eng.finished)
+    out = sched.drain()
+    sched.close()
+    assert len(out) == 4
+    assert [r.model for r in eng.finished[n0:]] == ["gcn", "gcn",
+                                                    "gat", "gat"]
+
+
+# -------------------------------------------------------- deadline expiry
+
+
+def test_expired_request_completes_flagged_without_dispatch():
+    eng = _engine("plain")
+    clk = _fresh_clock(eng)
+    misses0, batches0 = (eng.metrics["deadline_misses"],
+                         eng.metrics["batches"])
+    uid_exp = eng.submit(_graph(40, 0), model="gcn", deadline_ms=10.0)
+    clk.advance(0.02)                           # queue wait blows the budget
+    uid_ok = eng.submit(_graph(41, 1), model="gat")
+    eng.run()
+    r_exp, r_ok = _by_uid(eng, uid_exp), _by_uid(eng, uid_ok)
+    assert r_exp.done and r_exp.deadline_missed and r_exp.preds is None
+    assert r_exp.finished_s - r_exp.submitted_s == pytest.approx(0.02)
+    assert r_ok.preds is not None and not r_ok.deadline_missed
+    # the expired request never occupied a batch slot
+    assert eng.metrics["batches"] - batches0 == 1
+    assert eng.metrics["deadline_misses"] - misses0 == 1
+
+
+def test_executed_but_late_flags_and_still_delivers():
+    eng = _engine("plain")
+    _fresh_clock(eng, default_batch_s=0.05)     # every dispatch "costs" 50ms
+    misses0 = eng.metrics["deadline_misses"]
+    uid = eng.submit(_graph(40, 0), model="gcn", deadline_ms=10.0)
+    eng.run()
+    r = _by_uid(eng, uid)
+    assert r.deadline_missed and r.preds is not None   # late, NOT dropped
+    assert eng.metrics["deadline_misses"] - misses0 == 1
+
+
+def test_no_deadline_request_can_never_expire():
+    eng = _engine("plain")
+    clk = _fresh_clock(eng)
+    uid = eng.submit(_graph(40, 0), model="gcn")
+    clk.advance(3600.0)                         # an hour in the queue
+    eng.run()
+    r = _by_uid(eng, uid)
+    assert not r.deadline_missed and r.preds is not None
+
+
+def test_scheduler_sweeps_expired_from_ready_buffer():
+    eng = _engine("plain")
+    clk = _fresh_clock(eng)
+    sched = PipelineScheduler(eng, PipelineConfig(deterministic=True))
+    t_exp = sched.submit(_graph(40, 0), model="gcn", deadline_ms=10.0)
+    t_ok = sched.submit(_graph(41, 1), model="gat")
+    clk.advance(0.05)
+    out = sched.drain()
+    assert out[t_exp].deadline_missed and out[t_exp].preds is None
+    assert not out[t_ok].deadline_missed and out[t_ok].preds is not None
+    assert sched.metrics["completed"] == 2      # expired still COMPLETES
+    sched.close()
+
+
+# ---------------------------------------- bias-corrected EWMA + the bank
+
+
+def test_ewma_bias_corrected_first_sample():
+    e = Ewma(alpha=0.1)
+    assert e.value is None and e.count == 0
+    assert e.observe(10.0) == pytest.approx(10.0)   # 1 sample -> that sample
+    for _ in range(9):
+        e.observe(1.0)
+    # bias-corrected estimate after [10, 1x9]: s/den = 1.0003/0.6513
+    assert e.value == pytest.approx(1.5358, rel=1e-3)
+    # the OLD trainer rule seeded the first sample with weight 1.0:
+    naive = None
+    for x in [10.0] + [1.0] * 9:
+        naive = x if naive is None else 0.9 * naive + 0.1 * x
+    assert naive == pytest.approx(4.487, rel=1e-3)
+    # the fix matters: the naive estimate is ~3x further from the truth
+    assert abs(e.value - 1.0) < abs(naive - 1.0) / 3
+    assert (e.min, e.max, e.count) == (1.0, 10.0, 10)
+
+
+def test_straggler_gate_excludes_stragglers_and_catches_outlier():
+    gate = StragglerGate(factor=2.5, alpha=0.1)
+    assert gate.baseline is None
+    assert not gate.check(10.0)     # first (compile-heavy) step: no verdict
+    for _ in range(9):
+        assert not gate.check(1.0)
+    base = gate.baseline
+    assert base == pytest.approx(1.5358, rel=1e-3)
+    # 3.9s: flagged under the bias-corrected baseline (2.5 * 1.536 = 3.84);
+    # the old weight-1.0 seeding put the bar at 2.5 * 4.487 = 11.2 — missed
+    assert gate.check(3.9)
+    assert gate.baseline == base    # stragglers never train the baseline
+    assert not gate.check(1.0)
+
+
+def test_trainer_uses_shared_straggler_gate():
+    """Satellite (c): the trainer's straggler EWMA is the shared
+    `runtime/ewma.py` implementation, not a private copy."""
+    import repro.runtime.trainer as trainer
+    assert trainer.StragglerGate is StragglerGate
+
+
+def test_latency_bank_seed_vs_measured():
+    bank = LatencyBank(alpha=0.2)
+    key = ("m", 128, "fp32", "dense", "none", 0)
+    assert bank.predict(key) is None
+    bank.seed(key, 1e-3)
+    assert bank.predict(key) == pytest.approx(1e-3)
+    assert bank.measured(key) is None
+    # first real sample REPLACES the seed outright — never blended
+    bank.observe(key, 5e-3)
+    assert bank.predict(key) == pytest.approx(5e-3)
+    assert bank.measured(key) == pytest.approx(5e-3)
+    assert bank.samples(key) == 1
+
+
+def test_latency_bank_prediction_stays_within_sample_range():
+    bank = LatencyBank(alpha=0.2)
+    key = ("m", 128, "fp32", "dense", "none", 0)
+    bank.seed(key, 123.0)                       # wildly wrong seed
+    xs = [0.004, 0.011, 0.007, 0.002, 0.009, 0.005]
+    for x in xs:
+        bank.observe(key, x)
+        assert min(xs) <= bank.predict(key) <= max(xs)
+
+
+def test_latency_bank_measured_pair():
+    bank = LatencyBank()
+    kd = ("m", 256, "fp32", "dense", "none", 0)
+    kg = ("m", 256, "fp32", "grasp", "none", 0)
+    bank.seed(kd, 1e-4)
+    bank.seed(kg, 2e-4)
+    match = lambda k: k[0] == "m" and k[1] == 256
+    backend_of = lambda k: k[3]
+    assert bank.measured_pair(match=match, backend_of=backend_of) == {}
+    bank.observe(kd, 3e-3)                      # seeds never count
+    pair = bank.measured_pair(match=match, backend_of=backend_of)
+    assert set(pair) == {"dense"}
+    bank.observe(kg, 1e-3)
+    pair = bank.measured_pair(match=match, backend_of=backend_of)
+    assert pair["dense"] == pytest.approx(3e-3)
+    assert pair["grasp"] == pytest.approx(1e-3)
+
+
+def test_ewma_converges_from_wrong_roofline_seed():
+    """Engine-level: the bank's roofline seed is orders of magnitude off;
+    measured dispatches (scripted at 5ms) take over from the FIRST sample
+    and `summary()["ewma_vs_model"]` exposes the model error."""
+    eng = _engine("solo")
+    clk = _fresh_clock(eng)
+    clk.script({0: "gcn"}, 0.005)
+    key = ("gcn", 128, "fp32", "dense", "none", 0)
+    seed_pred = eng.bank.predict(key)
+    assert seed_pred is not None and seed_pred < 1e-4   # roofline: way off
+    for i in range(6):
+        eng.submit(_graph(40 + i, i), model="gcn")
+        eng.run()
+        assert eng.bank.predict(key) == pytest.approx(0.005)
+    assert eng.bank.samples(key) >= 6
+    s = eng.summary()
+    assert s["ewma_vs_model"] is not None and s["ewma_vs_model"] > 100
+
+
+# ------------------------------------- measured-latency backend routing
+
+
+def test_measured_inversion_flips_select_agg_backend():
+    """The BENCH grasp regression, pinned: the roofline says grasp wins at
+    (cap 2048, 64 feats, 4 blocks), but MEASURED latency says dense is 5x
+    faster — `measured=` must flip the auto decision. This test fails
+    against the old roofline-only `select_agg_backend`."""
+    base, dense_s, grasp_s = select_agg_backend(
+        2048, 64, nnz_blocks=4, max_row_nnz=1, mode="auto")
+    assert base == "grasp" and grasp_s < dense_s        # the model's view
+    flipped, d2, g2 = select_agg_backend(
+        2048, 64, nnz_blocks=4, max_row_nnz=1, mode="auto",
+        measured=(1e-4, 5e-4))
+    assert flipped == "dense"
+    assert (d2, g2) == (dense_s, grasp_s)   # reported costs stay modelled
+    # a PARTIAL pair never overrides — the unmeasured path is not condemned
+    part, _, _ = select_agg_backend(2048, 64, nnz_blocks=4, max_row_nnz=1,
+                                    mode="auto", measured=(None, 5e-4))
+    assert part == "grasp"
+    # eligibility is structural and measurement can never override it
+    dense_forced, _, _ = select_agg_backend(
+        2048, 64, nnz_blocks=4, max_row_nnz=10, mode="auto",
+        measured=(1.0, 1e-6))
+    assert dense_forced == "dense"
+
+
+def test_measured_inversion_flips_engine_backend_routing():
+    """End to end: a sparse graph routes dense by the roofline; after the
+    bank holds measured samples showing grasp 1000x cheaper at this
+    (model, bucket), the SAME submission routes grasp."""
+    eng = _engine("tiers")
+    _fresh_clock(eng)
+    uid = eng.submit(_graph(200, 0), model="gcn", tier="fp32")
+    eng.run()
+    assert _by_uid(eng, uid).backend == "dense"         # roofline choice
+    eng.bank.observe(("gcn", 256, "fp32", "dense", "none", 0), 1e-3)
+    eng.bank.observe(("gcn", 256, "fp32", "grasp", "none", 0), 1e-6)
+    uid = eng.submit(_graph(200, 0), model="gcn", tier="fp32")
+    eng.run()
+    r = _by_uid(eng, uid)
+    assert r.backend == "grasp" and r.preds is not None
+    eng.assert_warm()                                   # the flip replays warm
+
+
+# ------------------------------------------------------ tolerance routing
+
+
+def test_tolerance_routes_cheapest_fitting_tier():
+    # the dense-backend "governed" engine keeps the cost comparison
+    # one-variant-per-tier (tolerance routing itself never consults the
+    # governor, which only steers fully-unpinned requests)
+    eng = _engine("governed")
+    clk = _fresh_clock(eng)
+    _reset_governor(eng.governor)
+    # scripted costs keep the bank's measured side consistent with the
+    # expectation as the test's own dispatches feed it: int8 runs cheaper
+    clk.script({2: "fp32"}, 5e-3)
+    clk.script({2: "int8"}, 1e-4)
+    eng.models["gcn"].accuracy_delta["int8"] = -2.0  # costs 2 accuracy pts
+    uid = eng.submit(_graph(40, 0), model="gcn", tolerance=1.0)
+    eng.run()
+    assert _by_uid(eng, uid).tier == "fp32"     # nothing cheap fits 1pt
+    uid = eng.submit(_graph(41, 1), model="gcn", tolerance=3.0)
+    eng.run()
+    assert _by_uid(eng, uid).tier == "int8"     # int8 fits and is cheaper
+    eng.assert_warm()
+
+
+def test_tolerance_router_prefers_measured_cost_over_seed():
+    """Measured samples trump seeds: the seed says int8 is cheaper, so the
+    cold router picks it — but the dispatch MEASURES int8 slow (scripted),
+    and the very next request routes back to fp32. The wrong seed never
+    blends into the verdict."""
+    eng = _engine("governed")
+    clk = _fresh_clock(eng)
+    _reset_governor(eng.governor)
+    clk.script({2: "fp32"}, 1e-6)
+    clk.script({2: "int8"}, 1e-3)
+    eng.models["gcn"].accuracy_delta["int8"] = -2.0
+    kf = ("gcn", 128, "fp32", "dense", "none", 0)
+    ki = ("gcn", 128, "int8", "dense", "none", 0)
+    old_bank = eng.bank
+    try:
+        eng.bank = LatencyBank()                # isolate from other tests
+        eng.bank.seed(kf, 2e-7)
+        eng.bank.seed(ki, 1e-7)                 # seed story: int8 cheaper
+        tiers = []
+        for i in range(3):
+            uid = eng.submit(_graph(42 + i, i), model="gcn", tolerance=3.0)
+            eng.run()
+            tiers.append(_by_uid(eng, uid).tier)
+        # cold: seeds route int8; its own measured 1ms then loses to fp32
+        assert tiers == ["int8", "fp32", "fp32"]
+        assert eng.bank.measured(ki) == pytest.approx(1e-3)
+    finally:
+        eng.bank = old_bank
+
+
+def test_explicit_tier_is_a_contract_tolerance_never_overrides():
+    eng = _engine("governed")
+    _fresh_clock(eng)
+    _reset_governor(eng.governor)
+    uid = eng.submit(_graph(43, 3), model="gcn", tier="int8")
+    eng.run()
+    assert _by_uid(eng, uid).tier == "int8"     # calibrated -> served as asked
+
+
+# ----------------------------------------------------------- the governor
+
+
+def test_governor_hysteresis_and_recovery_unit():
+    cfg = SLOConfig(target_p99_ms=10.0, window=2, min_samples=2,
+                    breach_checks=3, clear_checks=2)
+    gov = SLOGovernor(cfg)
+    assert gov.p99_ms() is None
+    gov.observe(0.05)                           # below min_samples: no verdict
+    assert gov.p99_ms() is None and gov.level == 0
+    gov.observe(0.05)                           # breach 1
+    gov.observe(0.05)                           # breach 2
+    assert gov.level == 0                       # hysteresis: not yet
+    gov.observe(0.05)                           # breach 3 -> downgrade
+    assert gov.level == 1 and gov.downgrades == 1
+    gov.observe(0.001)                          # window [50ms, 1ms]: breach
+    assert gov.level == 1
+    gov.observe(0.001)                          # clear 1
+    assert gov.level == 1                       # one fast check ≠ recovery
+    gov.observe(0.001)                          # clear 2 -> upgrade
+    assert gov.level == 0 and gov.upgrades == 1
+
+
+def test_governor_saturates_at_bottom_rung():
+    gov = SLOGovernor(SLOConfig(window=2, min_samples=1, breach_checks=1,
+                                target_p99_ms=1.0))
+    for _ in range(10):
+        gov.observe(1.0)
+    assert gov.level == gov.max_level == 2
+    assert gov.downgrades == 2                  # never counts past the floor
+
+
+def test_governor_tier_override_walks_registered_ladder():
+    gov = SLOGovernor(SLOConfig())
+    assert gov.tier_override("fp32", ["fp32", "int8"]) is None  # level 0
+    gov.level = 1
+    assert gov.tier_override("fp32", ["fp32", "int8"]) == "int8"
+    assert gov.tier_override("fp32",
+                             ["fp32", "int8", "int8+grax"]) == "int8"
+    gov.level = 2
+    assert gov.tier_override("fp32", ["fp32", "int8"]) == "int8"  # saturates
+    assert gov.tier_override("fp32",
+                             ["fp32", "int8", "int8+grax"]) == "int8+grax"
+    assert gov.tier_override("fp32", ["fp32"]) == "fp32"
+
+
+def test_governor_should_shed_requires_floor_and_depth():
+    gov = SLOGovernor(SLOConfig(max_queue_depth=4))
+    assert not gov.should_shed(100)             # quality rungs still left
+    gov.level = gov.max_level
+    assert not gov.should_shed(3)               # queue still shallow
+    assert gov.should_shed(4)
+
+
+def test_governor_downgrades_then_recovers_serving_tier():
+    """The full engine-level cycle under scripted latencies: fp32 batches
+    breach the 10ms target -> the governor steps default traffic to int8;
+    int8 batches clear it -> traffic steps back up. Counted in summary()."""
+    eng = _engine("governed")
+    clk = _fresh_clock(eng)
+    _reset_governor(eng.governor)
+    clk.script({2: "fp32"}, 0.05)
+    clk.script({2: "int8"}, 0.001)
+    tiers = []
+    for i in range(6):
+        uid = eng.submit(_graph(40 + i, i), model="gcn")
+        eng.run()
+        tiers.append(_by_uid(eng, uid).tier)
+    assert tiers == ["fp32", "fp32", "int8", "int8", "int8", "fp32"]
+    s = eng.summary()
+    assert s["slo_downgrades"] == 1 and s["slo_level"] == 0
+    eng.assert_warm()                           # downgrades replay warm
+
+
+def test_governor_never_overrides_pinned_requests():
+    eng = _engine("governed")
+    clk = _fresh_clock(eng)
+    _reset_governor(eng.governor)
+    eng.governor.level = eng.governor.max_level
+    clk.script({2: "fp32"}, 0.05)
+    uid = eng.submit(_graph(44, 4), model="gcn", tier="fp32")
+    eng.run()
+    assert _by_uid(eng, uid).tier == "fp32"     # explicit pin honored
+
+
+def test_governor_sheds_at_floor_through_scheduler_reject_path():
+    eng = _engine("governed")
+    _fresh_clock(eng)
+    _reset_governor(eng.governor)
+    eng.governor.level = eng.governor.max_level  # quality exhausted
+    shed0 = eng.metrics["shed_requests"]
+    sched = PipelineScheduler(eng, PipelineConfig(deterministic=True))
+    sched.submit(_graph(40, 0), model="gcn")     # depth 0: accepted
+    sched.submit(_graph(41, 1), model="gcn")     # depth 1: accepted
+    with pytest.raises(QueueFull):
+        sched.submit(_graph(42, 2), model="gcn")  # depth 2 >= 2: shed
+    assert sched.metrics["rejected"] == 1
+    assert eng.metrics["shed_requests"] - shed0 == 1
+    _reset_governor(eng.governor)                # let the backlog drain
+    sched.drain()
+    sched.close()
+
+
+# ---------------------------------------------------------------- summary
+
+
+def test_summary_exposes_slo_counters():
+    eng = _engine("plain")
+    s = eng.summary()
+    for k in ("deadline_misses", "shed_requests", "slo_downgrades",
+              "slo_upgrades", "slo_level", "ewma_vs_model"):
+        assert k in s
+    assert s["slo_downgrades"] == 0 and s["slo_level"] == 0  # no governor
+    assert s["slo_upgrades"] == 0
+
+
+# ------------------------------------------------------------------- soak
+
+
+def test_zero_recompile_soak_mixed_deadlines_and_tiers():
+    """Mixed deadline/tolerance/tier traffic over two buckets through the
+    deterministic scheduler, entirely on virtual time: every accepted
+    request completes exactly once, expiries are exactly the crafted
+    zero-budget set, and nothing recompiles."""
+    eng = _engine("tiers")
+    clk = _fresh_clock(eng, default_batch_s=1e-3)
+    misses0 = eng.metrics["deadline_misses"]
+    sched = PipelineScheduler(eng, PipelineConfig(deterministic=True))
+    N = 24
+    expect_miss = set()
+    for i in range(N):
+        kw = {}
+        if i % 3 == 0:
+            kw["tier"] = "int8"
+        elif i % 3 == 1:
+            kw["tolerance"] = 5.0
+        if i % 4 == 0:
+            kw["deadline_ms"] = 0.0             # zero budget: must expire
+            expect_miss.add(i)
+        elif i % 4 == 2:
+            kw["deadline_ms"] = 1e6             # must never expire
+        n = 40 if i % 2 == 0 else 200           # bucket mix: 128 and 256
+        t = sched.submit(_graph(n, seed=i), model="gcn", **kw)
+        assert t == i
+        clk.advance(1e-4)
+    out = sched.drain()
+    sched.close()
+    assert len(out) == N
+    assert len({r.uid for r in out}) == N       # exactly-once completion
+    for i, r in enumerate(out):
+        assert r.done
+        assert r.deadline_missed == (i in expect_miss)
+        assert (r.preds is None) == (i in expect_miss)
+        if i % 3 == 0:
+            assert r.tier == "int8"             # pins survive the SLO path
+    assert eng.metrics["deadline_misses"] - misses0 == len(expect_miss)
+    eng.assert_warm()                           # zero recompiles end to end
