@@ -813,6 +813,182 @@ def sharded_serving(dataset: str = "synthetic", *, quick: bool = True,
     return rows
 
 
+def partition_quality(dataset: str = "synthetic", *, quick: bool = True,
+                      seed: int = 0) -> List[Dict]:
+    """Partitioner quality and §15 serving wins (DESIGN.md §15): multilevel
+    coarsen+refine vs the §12 greedy streaming cut, replica-group
+    throughput scaling, and delta-halo vs full-halo exchange bytes under
+    edge churn.
+
+    Three row groups, each carrying its acceptance assert IN the benchmark
+    (a regression fails the CI leg, not just a dashboard):
+
+      * cut/ — greedy vs multilevel on the community-clustered serving
+        graph at 4 and 8 shards: cut_edges, halo rows, and the bytes a
+        SPARSE per-layer halo gather would move (4 B x halo rows x
+        exchanged widths; the dense full-row psum the plan ships is
+        partition-independent, so halo rows are where cut quality turns
+        into wire). Asserts the multilevel cut is STRICTLY below greedy.
+        Also one measured serving row per method — same graph, same
+        queries, engines differing only in `partition_method`.
+      * replica/ — one 2-shard layout dispatched at replica_groups R =
+        1/2/4 over the same query stream: measured per-query wall,
+        dispatch count (must be ceil(N/R) — the §15 packing claim), and
+        modelled rps R/modelled_latency (replica rows share no
+        collectives, so an R x S mesh runs them concurrently at the
+        single-replica latency). Asserts modelled rps monotone in R and
+        the measured dispatch counts exactly ceil(N/R).
+      * delta/ — a churn loop of one-pair GrAd deltas against a sharded
+        graph: `delta_halo_bytes_exchanged` (dirty boundary rows through
+        `compressed_psum_delta`'s pricing) vs `delta_halo_bytes_full`
+        (re-exchanging every operand row). Asserts delta < full.
+    """
+    import time as _time
+
+    from repro.core.graph import BucketLadder
+    from repro.core.partition import (modelled_sharded_latency,
+                                      partition_graph)
+    from repro.core.models import sharded_exchange_widths
+    from repro.data.graphs import clustered_like
+    from repro.runtime.gnn_server import GraphServe, GraphServeConfig
+
+    in_feats, hidden, classes = 16, 64, 5
+    n = 1800
+    cfg = GNNConfig(kind="gcn", in_feats=in_feats, hidden=hidden,
+                    num_classes=classes)
+    g = clustered_like(num_nodes=n, num_feats=in_feats, num_classes=classes,
+                       within_density=0.02, cross_frac=0.05, seed=seed)
+    widths = sharded_exchange_widths(cfg)
+    rows = []
+
+    # ---- cut quality: greedy vs multilevel ---------------------------
+    for shards, bucket in ((4, 512),) if quick else ((4, 512), (8, 256)):
+        parts = {m: partition_graph(g.edge_index, n, shards,
+                                    shard_cap=bucket, method=m)
+                 for m in ("greedy", "multilevel")}
+        assert parts["multilevel"].cut_edges < parts["greedy"].cut_edges, (
+            "multilevel refinement must strictly beat the greedy "
+            "streaming cut on a community-clustered graph",
+            parts["multilevel"].cut_edges, parts["greedy"].cut_edges)
+        for m, p in parts.items():
+            halo_rows = sum(len(h) for h in p.halo)
+            sparse_bytes = 4 * halo_rows * sum(widths)
+            rows.append(record(
+                f"partition_quality/cut/{dataset}/shards{shards}/{m}", 0.0,
+                f"cut_edges={p.cut_edges} halo_rows={halo_rows} "
+                f"sparse_halo_bytes={sparse_bytes} "
+                f"loads={'/'.join(str(int(x)) for x in p.loads)}"))
+    # measured serving, same traffic, partition_method the only knob
+    n_q = 2 if quick else 4
+    for m in ("greedy", "multilevel"):
+        sc = GraphServeConfig(ladder=BucketLadder(buckets=(512,)),
+                              batch_slots=1, shard_counts=(4,),
+                              partition_method=m)
+        eng = GraphServe(sc, seed=seed)
+        eng.register_model("gcn", cfg)
+        eng.warmup()
+        gid = eng.attach(g, model="gcn", calibrate=False)
+        part = eng._sharded[gid][0]
+        eng.query(gid)
+        eng.run()                  # untimed: slice-build is attach cost
+        t0 = _time.perf_counter()
+        for _ in range(n_q):
+            eng.query(gid)
+            eng.run()
+        wall = (_time.perf_counter() - t0) / n_q
+        eng.assert_warm()
+        rows.append(record(
+            f"partition_quality/serve/{dataset}/{m}", wall,
+            f"cut_edges={part.cut_edges} shards=4 bucket=512",
+            modelled_s=modelled_sharded_latency(
+                part, in_feats=in_feats, hidden=hidden, classes=classes,
+                exchange_widths=widths)))
+        eng.detach(gid)
+
+    # ---- replica-group scaling --------------------------------------
+    small = clustered_like(num_nodes=200, num_feats=in_feats,
+                           num_classes=classes, within_density=0.05,
+                           cross_frac=0.1, seed=seed + 1)
+    n_q = 4 if quick else 8
+    modelled_rps = []
+    for r in (1, 2, 4):
+        sc = GraphServeConfig(ladder=BucketLadder(buckets=(128,)),
+                              batch_slots=1, shard_counts=(2,),
+                              replica_groups=r)
+        eng = GraphServe(sc, seed=seed)
+        eng.register_model("gcn", cfg)
+        eng.warmup()
+        gid = eng.attach(small, model="gcn", calibrate=False)
+        eng.query(gid)
+        eng.run()
+        part = eng._sharded[gid][0]
+        before = eng.metrics["sharded_batches"]
+        t0 = _time.perf_counter()
+        for _ in range(n_q):
+            eng.query(gid)
+        eng.run()
+        wall = (_time.perf_counter() - t0) / n_q
+        eng.assert_warm()
+        dispatches = eng.metrics["sharded_batches"] - before
+        assert dispatches == -(-n_q // r), (
+            "replica packing must dispatch ceil(N/R) sharded batches",
+            dispatches, n_q, r)
+        lat = modelled_sharded_latency(part, in_feats=in_feats,
+                                       hidden=hidden, classes=classes,
+                                       exchange_widths=widths)
+        modelled_rps.append(r / lat)
+        rows.append(record(
+            f"partition_quality/replica/{dataset}/r{r}", wall,
+            f"dispatches={dispatches} queries={n_q} "
+            f"occupancy={eng.summary()['batch_occupancy']:.2f} "
+            f"modelled_rps={r / lat:.0f}", modelled_s=lat))
+        eng.detach(gid)
+    assert all(b > a for a, b in zip(modelled_rps, modelled_rps[1:])), (
+        "replica rows share no collectives: modelled throughput must "
+        "rise monotonically with R", modelled_rps)
+
+    # ---- delta-halo vs full-halo bytes under churn ------------------
+    sc = GraphServeConfig(ladder=BucketLadder(buckets=(128,)),
+                          batch_slots=1, shard_counts=(2,))
+    eng = GraphServe(sc, seed=seed)
+    eng.register_model("gcn", cfg)
+    eng.warmup()
+    gid = eng.attach(small, model="gcn", calibrate=False)
+    eng.query(gid)
+    eng.run()
+    part = eng._sharded[gid][0]
+    rng = np.random.default_rng(seed)
+    churn = 4 if quick else 12
+    done = 0
+    while done < churn:
+        u, v = rng.integers(0, 200, size=2)
+        if u == v:
+            continue
+        adj = eng.graphs[gid][1].adj
+        pair = [(int(u), int(v))]
+        ok = eng.update_delta(
+            gid, add_edges=pair if adj[u, v] == 0 else None,
+            remove_edges=pair if adj[u, v] != 0 else None)
+        done += bool(ok)
+    s = eng.summary()
+    assert 0 < s["delta_halo_bytes_exchanged"] < s["delta_halo_bytes_full"], (
+        "dirty-row exchange must move strictly fewer bytes than full "
+        "halo re-exchange", s["delta_halo_bytes_exchanged"],
+        s["delta_halo_bytes_full"])
+    eng.query(gid)
+    eng.run()
+    eng.assert_warm()           # churn never left the warm patch traces
+    rows.append(record(
+        f"partition_quality/delta/{dataset}/churn{churn}", 0.0,
+        f"delta_bytes={s['delta_halo_bytes_exchanged']} "
+        f"full_bytes={s['delta_halo_bytes_full']} "
+        f"dirty_rows={s['delta_dirty_rows']} "
+        f"saving={s['delta_halo_bytes_full'] / max(s['delta_halo_bytes_exchanged'], 1):.0f}x "
+        f"shards={part.shards}"))
+    eng.detach(gid)
+    return rows
+
+
 # ------------------------------------------------------- energy / GraSp
 
 

@@ -49,6 +49,7 @@ def _families(args, datasets, gnn_paper, lm_subs):
             cap=512 if q else 1024, n_queries=2 if q else 4),
         "fused_layers": lambda: gnn_paper.fused_layers(quick=q),
         "sharded_serving": lambda: gnn_paper.sharded_serving(quick=q),
+        "partition_quality": lambda: gnn_paper.partition_quality(quick=q),
         "cache_pressure": lambda: gnn_paper.cache_pressure(quick=q),
         "slo_serving": lambda: gnn_paper.slo_serving(quick=q),
         "lm_subs": lambda: (lm_subs.ssd_vs_sequential(),
@@ -116,6 +117,9 @@ def main() -> None:
     # sharded serving of a partitioned giant graph (DESIGN.md §12):
     # throughput vs shard count with compressed halo exchange
     families["sharded_serving"]()
+    # §15 partitioner quality, replica-group scaling, delta-halo bytes —
+    # the acceptance asserts run IN the benchmark
+    families["partition_quality"]()
     # bounded cache hierarchy under churn + GrAd delta updates
     # (DESIGN.md §13): eviction/spill-fault costs and delta-vs-rebuild
     families["cache_pressure"]()
@@ -139,6 +143,7 @@ def _write(args, rows) -> None:
                                          "grasp_serving/",
                                          "fused_layers/",
                                          "sharded_serving/",
+                                         "partition_quality/",
                                          "cache_pressure/",
                                          "slo_serving/"))]
         with open(args.bench_json, "w") as f:

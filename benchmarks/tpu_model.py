@@ -37,10 +37,9 @@ from typing import Callable, Dict
 
 import jax
 
-PEAK_BF16 = 197e12
-PEAK_INT8 = 394e12
-HBM_BW = 819e9
-GATHER_BW = 819e9 * 0.05      # serialized gather/scatter effective rate
+from repro.core.costs import GATHER_BW, HBM_BW, PEAK_BF16  # noqa: F401
+
+PEAK_INT8 = 2 * PEAK_BF16     # int8 dots at the 2x MXU rate (QuantGr)
 VPU_RATE = PEAK_BF16 / 8      # elementwise/transcendental fallback
 
 _DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,

@@ -1,0 +1,42 @@
+"""One source of truth for the modelled wire/compute constants.
+
+Before this module, three copies of the derated-accelerator numbers had
+drifted into the tree: `core/partition.py` (the GraphSplit stage planner
+and `modelled_sharded_latency` each inlined `197e12 * 0.4`),
+`core/sparsity.py` (the §10 backend rule's `MXU_RATE`/`HBM_BW`), and
+`benchmarks/tpu_model.py` (the HLO pricer's `PEAK_BF16`/`HBM_BW`/
+`GATHER_BW`). The `LatencyBank` roofline seeds (`GraphServe.
+_modelled_batch_s`), the sharded latency model, and the benchmark pricer
+all claim to use "the same constants" — this module makes that claim
+structural instead of a comment. Every consumer imports from here;
+the historical module-level names stay re-exported at their old homes
+so external callers keep working.
+
+The numbers model a TPU-v4-class part (same spirit as the paper's NPU
+asymmetry): a fast dense MXU datapath, full-bandwidth HBM, serialized
+gather/scatter, a PCIe-class host link, and an ICI-class device fabric.
+"""
+from __future__ import annotations
+
+# --- compute (derated dense roofline) --------------------------------------
+PEAK_BF16 = 197e12             # peak dense bf16/fp32-accum FLOPs/s
+MXU_DERATE = 0.4               # sustained fraction of peak on real layers
+MXU_RATE = PEAK_BF16 * MXU_DERATE  # derated dense throughput (FLOPs/s)
+HBM_BW = 819e9                 # HBM bytes/s, full streaming bandwidth
+GATHER_BW = HBM_BW * 0.05      # serialized gather/scatter effective bytes/s
+CPU_RATE = 5e10                # host scalar throughput (ops/s)
+
+# --- host link (PCIe-class) ------------------------------------------------
+# Deliberately much slower than HBM so the GraphSplit cost model penalizes
+# chatty host/device partitions, as on a real TPU host (DESIGN.md §2).
+HOST_LINK_BYTES_PER_S = 16e9
+LAUNCH_LATENCY_S = 20e-6
+
+# --- device interconnect (ICI-class) ---------------------------------------
+# What the sharded serving path's halo collectives cross (DESIGN.md §12):
+# an order of magnitude more bandwidth than the host link and a
+# per-collective latency closer to a kernel launch than a PCIe round-trip.
+# Distinct constants so the host/device cut and the N-way shard model can
+# never silently share the wrong wire.
+DEVICE_LINK_BYTES_PER_S = 100e9
+COLLECTIVE_LATENCY_S = 2e-6

@@ -370,6 +370,24 @@ class EdgeDelta:
     touched: np.ndarray            # (T,) int32 sorted nodes with changed
     #                                rows/cols (the flip endpoints)
 
+    def boundary_rows(self, assignment: np.ndarray,
+                      num_nodes: int) -> np.ndarray:
+        """Touched nodes whose rows cross a shard boundary (DESIGN.md §15).
+
+        Against a shard `assignment` (GraphShards.assignment, original
+        node ids), returns the sorted subset of `touched` that has at
+        least one neighbor on ANOTHER shard in the PATCHED adjacency —
+        the only rows whose remote copies a sharded halo re-exchange must
+        refresh. A delta confined to one shard's interior returns an
+        empty set: nothing crosses the wire.
+        """
+        t = self.touched[self.touched < num_nodes]
+        if t.size == 0:
+            return t.astype(np.int32)
+        sub = self.adj[t][:, :num_nodes] != 0
+        diff = assignment[None, :num_nodes] != assignment[t][:, None]
+        return t[(sub & diff).any(axis=1)].astype(np.int32)
+
 
 def apply_edge_delta(adj: np.ndarray, norm_adj: np.ndarray, num_nodes: int,
                      add_edges, remove_edges) -> Optional[EdgeDelta]:

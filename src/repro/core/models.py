@@ -577,13 +577,20 @@ class DeltaSpec:
     flip_j: jnp.ndarray            # (K_e,) int32  both (i,j) and (j,i) write)
     flip_v: jnp.ndarray            # (K_e,) float32 new awl value (1=add 0=rm)
     touched: jnp.ndarray           # (K_t,) int32 nodes with changed rows/cols
+    dirty: jnp.ndarray             # (K_t,) int32 boundary-dirty subset of
+    #                                `touched` (§15): rows whose remote
+    #                                copies a sharded halo-delta exchange
+    #                                must refresh — padded like `touched`;
+    #                                unused by the local patch math (an
+    #                                unsharded delta pads it inertly)
     dis: jnp.ndarray               # (cap,) float32 patched D^-1/2
     fields: Tuple[str, ...] = ()   # static: which operand fields to patch
 
 
 jax.tree_util.register_pytree_node(
     DeltaSpec,
-    lambda d: ((d.flip_i, d.flip_j, d.flip_v, d.touched, d.dis), d.fields),
+    lambda d: ((d.flip_i, d.flip_j, d.flip_v, d.touched, d.dirty, d.dis),
+               d.fields),
     lambda fields, c: DeltaSpec(*c, fields=fields))
 
 
@@ -1191,8 +1198,8 @@ def forward_grannite_sharded(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
 
 
 def build_sharded_plan(cfg: GNNConfig, shard_cap: int, shards: int,
-                       t: Techniques, *, compress: bool = True
-                       ) -> ExecutionPlan:
+                       t: Techniques, *, compress: bool = True,
+                       replicas: int = 1) -> ExecutionPlan:
     """Sharded ExecutionPlan: per-shard aggregate+combine under a shard
     axis, halo exchange as a compressed psum (DESIGN.md §12).
 
@@ -1205,6 +1212,16 @@ def build_sharded_plan(cfg: GNNConfig, shard_cap: int, shards: int,
     Sharded plans are dense, fusion="none", single-graph (the shard axis
     occupies the leading dim a batched plan would use); call with
     `plan(params, x, ops, quant, node_mask=mask)`.
+
+    `replicas=R > 1` adds a replica axis (DESIGN.md §15): every array
+    operand gains a LEADING R dim and the plan runs R independent sharded
+    batches concurrently — on the ("replica", "shard") R x S mesh when the
+    host has R*S devices, else under an outer anonymous vmap. The replica
+    axis carries NO collectives (halo psums name only "shard", so each
+    replica row exchanges within itself); replica rows are bit-identical
+    to R separate single-replica dispatches, which the property tests
+    assert. `replicas=1` is the historical calling convention exactly —
+    no leading dim, same jaxpr.
     """
     plan = ExecutionPlan(cfg=cfg, techniques=t, capacity=shard_cap,
                          batch_size=0, backend="dense", fusion="none",
@@ -1217,7 +1234,8 @@ def build_sharded_plan(cfg: GNNConfig, shard_cap: int, shards: int,
             params, cfg, x, ops_, mask, t, quant=quant, shard_cap=shard_cap,
             full_rows=full_rows, axis_name="shard", compress=compress)
 
-    if shards > 1 and len(jax.devices()) >= shards:
+    lead = 1 if replicas == 1 else 2          # dims ahead of (cap, ...)
+    if shards > 1 and len(jax.devices()) >= shards * replicas:
         from jax.sharding import PartitionSpec as P
 
         from repro.dist.sharding import spec_for_axes
@@ -1226,25 +1244,33 @@ def build_sharded_plan(cfg: GNNConfig, shard_cap: int, shards: int,
             from jax.experimental.shard_map import shard_map
         except ImportError:                   # newer jax moved it
             from jax import shard_map
-        mesh = make_shard_mesh(shards)
-        row = spec_for_axes(("graph_shard",), (shards,), mesh)
+        if replicas == 1:
+            mesh = make_shard_mesh(shards)
+            row = spec_for_axes(("graph_shard",), (shards,), mesh)
+        else:
+            mesh = make_shard_mesh(shards, replicas)
+            row = spec_for_axes(("graph_replica", "graph_shard"),
+                                (replicas, shards), mesh)
         x_spec = P(*row, None, None)
         mask_spec = P(*row, None)
 
         def _spmd(params, x, ops_, mask, quant):
-            # shard_map leaves keep a leading dim of 1 (= shards/shards)
-            sq = lambda l: l.reshape(l.shape[1:])
+            # shard_map leaves keep leading block dims of 1 per mesh axis
+            sq = lambda l: l.reshape(l.shape[lead:])
             out = _forward(params, sq(x), jax.tree_util.tree_map(sq, ops_),
                            sq(mask), quant)
-            return out[None]
+            return out.reshape((1,) * lead + out.shape)
 
         plan.fn = jax.jit(shard_map(
             _spmd, mesh=mesh,
             in_specs=(P(), x_spec, P(*row), mask_spec, P()),
             out_specs=x_spec, check_rep=False))
     else:
-        plan.fn = jax.jit(jax.vmap(_forward, in_axes=(None, 0, 0, 0, None),
-                                   axis_name="shard"))
+        fn = jax.vmap(_forward, in_axes=(None, 0, 0, 0, None),
+                      axis_name="shard")
+        if replicas > 1:
+            fn = jax.vmap(fn, in_axes=(None, 0, 0, 0, None))
+        plan.fn = jax.jit(fn)
     return plan
 
 

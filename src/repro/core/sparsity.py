@@ -286,9 +286,9 @@ def block_stats(a: np.ndarray, *, block_size: int = MXU_TILE) -> Dict:
 # --------------------- backend dispatch rule (DESIGN.md §10) ----------------
 
 # Same modelled-latency style as partition.default_gnn_stages and
-# benchmarks/tpu_model.py: MXU-rate dense FLOPs, full-bandwidth HBM bytes.
-MXU_RATE = 197e12 * 0.4        # derated dense throughput (partition.py)
-HBM_BW = 819e9
+# benchmarks/tpu_model.py — structurally the same numbers now: every
+# consumer reads `core.costs` (re-exported here for existing importers).
+from .costs import HBM_BW, MXU_RATE  # noqa: F401  (re-export)
 # Per-grid-step cost of the sparse kernel (scalar-prefetch read, index-map
 # evaluation, small-dot underutilization) — what keeps tiny buckets dense.
 GRASP_STEP_OVERHEAD_S = 5e-8

@@ -71,3 +71,32 @@ def compressed_psum(g: jnp.ndarray, axis_names: AxisNames
     residual = g - represented
     # the wire format is int8; the sum accumulates in the working dtype
     return jax.lax.psum(q.astype(g.dtype), axis_names) * scale, residual
+
+
+def compressed_psum_delta(rows: jnp.ndarray, owners: jnp.ndarray,
+                          axis_names: AxisNames, *,
+                          compress: bool = True) -> jnp.ndarray:
+    """Halo-DELTA exchange: assemble only the dirty boundary rows from
+    their owning shards (DESIGN.md §15).
+
+    A GrAd edge delta dirties a handful of boundary rows; re-exchanging
+    the full halo would move the whole (full_rows, width) buffer when
+    only `k` rows changed. Each participant passes its local (k, width)
+    copy of the dirty-row buffer plus the (k,) `owners` vector mapping
+    each dirty row to the shard that owns it; rows this participant does
+    NOT own are masked to zero, so the contributions are disjoint by
+    construction and the psum is an assembly, not an accumulation — the
+    wire moves k rows instead of full_rows (`ring_psum_nbytes` over
+    k*width elements prices it). `compress=True` rides the int8 QuantGr
+    wire of `compressed_psum` (<= scale/2 elementwise error, exactly the
+    §12 halo bound); `compress=False` psums exact fp32 — BIT-identical
+    assembly (masked zeros add exactly), which is what the operand-delta
+    path requires to keep patched slices rebuild-exact.
+    """
+    idx = jax.lax.axis_index(axis_names)
+    mine = (owners == idx).astype(rows.dtype)[:, None]
+    buf = rows * mine
+    if compress:
+        full, _ = compressed_psum(buf, axis_names)
+        return full
+    return jax.lax.psum(buf, axis_names)

@@ -38,6 +38,9 @@ AXIS_RULES: Dict[str, Optional[str]] = {
     # row-partitioned operands maps onto the "shard" mesh axis of
     # launch.mesh.make_shard_mesh; every other operand dim replicates.
     "graph_shard": "shard",
+    # Replica groups (DESIGN.md §15): the outer replica axis of an R-wide
+    # sharded dispatch maps onto the "replica" mesh axis of the R x S mesh.
+    "graph_replica": "replica",
 }
 
 # Expert parallelism is placement-dependent (capacity vs bandwidth); the

@@ -43,17 +43,25 @@ def make_host_mesh(*, data: int | None = None, model: int = 1):
     return Mesh(np.asarray(devs[:need]).reshape(d, model), ("data", "model"))
 
 
-def make_shard_mesh(shards: int):
-    """1-D ("shard",) mesh for sharded GNN serving (DESIGN.md §12).
+def make_shard_mesh(shards: int, replicas: int = 1):
+    """Mesh for sharded GNN serving (DESIGN.md §12, §15).
 
-    One device per graph shard; raises when the host exposes fewer devices
-    (the sharded plan then falls back to a vmap-simulated shard axis, which
-    computes the identical collective math on one device — CI's multi-device
-    leg runs the real SPMD placement under
+    `replicas=1` (the default) builds the 1-D ("shard",) mesh — one device
+    per graph shard. `replicas=R > 1` builds the R x S replica-group mesh
+    ("replica", "shard"): R concurrent batches of the SAME shard layout,
+    each replica row owning its own S-device column set, so halo psums
+    (over "shard") stay within a replica. Raises when the host exposes too
+    few devices (the sharded plan then falls back to a vmap-simulated
+    axis, which computes the identical collective math on one device —
+    CI's multi-device leg runs the real SPMD placement under
     XLA_FLAGS=--xla_force_host_platform_device_count=8).
     """
     devs = jax.devices()
-    if len(devs) < shards:
+    need = shards * replicas
+    if len(devs) < need:
         raise RuntimeError(
-            f"shard mesh needs {shards} devices, found {len(devs)}")
-    return Mesh(np.asarray(devs[:shards]), ("shard",))
+            f"shard mesh needs {need} devices, found {len(devs)}")
+    if replicas == 1:
+        return Mesh(np.asarray(devs[:shards]), ("shard",))
+    return Mesh(np.asarray(devs[:need]).reshape(replicas, shards),
+                ("replica", "shard"))

@@ -24,9 +24,10 @@ import dataclasses
 import re
 from typing import Any, Dict, List, Optional, Tuple
 
-PEAK_FLOPS_BF16 = 197e12      # per chip
-PEAK_FLOPS_INT8 = 394e12
-HBM_BW = 819e9                # bytes/s per chip
+from repro.core.costs import HBM_BW, PEAK_BF16  # noqa: F401  (one source)
+
+PEAK_FLOPS_BF16 = PEAK_BF16   # per chip
+PEAK_FLOPS_INT8 = 2 * PEAK_BF16
 ICI_BW = 50e9                 # bytes/s per link (~per-chip effective)
 DCN_BW = 6.25e9               # bytes/s per chip across pods (50 Gb/s class)
 

@@ -312,13 +312,20 @@ class PipelineScheduler:
                         for item in q)
             stats[k] = (len(q), q[0][0], slack)
         return edf_best_fill_key(stats, self.engine.sc.batch_slots,
-                                 self.engine._last_dispatch)
+                                 self.engine._last_dispatch,
+                                 replica_slots=self.engine.sc.replica_groups)
+
+    def _width(self, key: BatchKey) -> int:
+        """Dispatch width of one batch key: sharded keys (§12) fill the
+        replica rows of the mesh (§15; width-1 when `replica_groups` is
+        1 — the shard axis occupies the dim a batch would use), unsharded
+        keys fill the batch slots."""
+        return (self.engine.sc.replica_groups if key[5]
+                else self.engine.sc.batch_slots)
 
     def _take_locked(self, key: BatchKey) -> List[GNNRequest]:
         q = self._ready[key]
-        # sharded keys (§12) dispatch width-1: the shard axis occupies the
-        # leading dim a batch would use, so each request is its own dispatch
-        n = 1 if key[5] else min(self.engine.sc.batch_slots, len(q))
+        n = min(self._width(key), len(q))
         batch = [q.popleft()[2] for _ in range(n)]
         if not q:
             del self._ready[key]
@@ -326,7 +333,6 @@ class PipelineScheduler:
         return batch
 
     def _dispatch_loop(self) -> None:
-        slots = self.engine.sc.batch_slots
         window_s = self.pc.window_ms * 1e-3
         while True:
             with self._cond:
@@ -346,7 +352,8 @@ class PipelineScheduler:
                     key = self._select_locked()
                     fill = len(self._ready[key])
                     unready = len(self._pending) + self._inflight_host
-                    if fill < slots and unready > 0 and window_s > 0:
+                    if (fill < self._width(key) and unready > 0
+                            and window_s > 0):
                         # batch window: stragglers are still in the host
                         # stage — wait (bounded by the key's oldest arrival
                         # + window) for a fuller batch before going partial

@@ -73,6 +73,48 @@ def test_compressed_psum_disjoint_blocks_bound():
     assert err <= scale / 2 + 1e-7, (err, scale / 2)
 
 
+def test_compressed_psum_delta_assembles_dirty_rows():
+    """Halo-DELTA exchange (DESIGN.md §15): each shard contributes only
+    the dirty rows it OWNS (ownership masked inside the collective), so
+    the psum assembles the dirty-row buffer exactly — `compress=False` is
+    BIT-identical to the owners' rows (masked zeros add exactly), which
+    is what the operand-delta path's rebuild-exact contract needs."""
+    from repro.dist.compress import compressed_psum_delta
+    rng = np.random.default_rng(4)
+    shards, k, width = 4, 6, 8
+    owners = jnp.asarray(rng.integers(0, shards, size=(k,)), jnp.int32)
+    # every shard holds a DIFFERENT local buffer; only owned rows survive
+    local = rng.normal(size=(shards, k, width)).astype(np.float32)
+    rows = jnp.asarray(local)
+    out = _vaxis(lambda x: compressed_psum_delta(x, owners, "shard",
+                                                 compress=False), rows)
+    expect = local[np.asarray(owners), np.arange(k)]
+    np.testing.assert_array_equal(np.asarray(out)[0], expect)
+    # every lane agrees (it is one psum)
+    for s in range(shards):
+        np.testing.assert_array_equal(np.asarray(out)[s], expect)
+
+
+def test_compressed_psum_delta_int8_error_bound():
+    """The compressed dirty-row wire carries the same <= scale/2
+    elementwise bound as the §12 halo exchange: disjoint-by-construction
+    contributions, one global pmax scale."""
+    from repro.dist.compress import compressed_psum_delta
+    rng = np.random.default_rng(5)
+    shards, k, width = 3, 5, 16
+    owners = jnp.asarray(rng.integers(0, shards, size=(k,)), jnp.int32)
+    local = rng.normal(size=(shards, k, width)).astype(np.float32) * 2.0
+    out = _vaxis(lambda x: compressed_psum_delta(
+        x, owners, "shard", compress=True), jnp.asarray(local))
+    expect = local[np.asarray(owners), np.arange(k)]
+    # scale comes from the MASKED buffers each participant quantizes
+    masked = local * (np.asarray(owners)[None, :, None]
+                      == np.arange(shards)[:, None, None])
+    scale = float(np.abs(masked).max()) / INT8_MAX
+    err = np.abs(np.asarray(out)[0] - expect).max()
+    assert err <= scale / 2 + 1e-7, (err, scale / 2)
+
+
 def test_compressed_psum_sum_consistent_with_mean():
     """compressed_psum_mean must be exactly compressed_psum / n — one wire
     format, two reductions."""
@@ -100,6 +142,15 @@ def test_graph_shard_rule_maps_to_shard_axis():
     spec = spec_for_axes(("graph_shard", None, None), (4, 128, 16),
                          _StubMesh(shard=4))
     assert tuple(spec) == ("shard", None, None)
+
+
+def test_graph_replica_rule_maps_to_replica_axis():
+    """Replica groups (DESIGN.md §15): the outer replica axis of an
+    R-wide sharded dispatch maps onto "replica" on the R x S mesh."""
+    assert AXIS_RULES["graph_replica"] == "replica"
+    spec = spec_for_axes(("graph_replica", "graph_shard", None, None),
+                         (2, 4, 128, 16), _StubMesh(replica=2, shard=4))
+    assert tuple(spec) == ("replica", "shard", None, None)
 
 
 def test_spec_divisibility_fallback():

@@ -289,6 +289,71 @@ def test_sharded_forward_equals_single_device(case):
     np.testing.assert_allclose(got, want, atol=tol)
 
 
+# cache replica plans per (kind, tier, shards, compress, R) — same warm-
+# trace economics as _SHARDED
+_REPLICA = {}
+
+
+def _replica_plan(kind, tier, shards, compress, replicas):
+    key = (kind, tier, shards, compress, replicas)
+    if key not in _REPLICA:
+        cfg, t, _, _, params = _sharded_setup(kind, tier, shards, compress)
+        _REPLICA[key] = (build_sharded_plan(cfg, SHARD_CAP, shards, t,
+                                            compress=compress,
+                                            replicas=replicas),
+                         cfg, t, params)
+    return _REPLICA[key]
+
+
+@st.composite
+def replica_case(draw):
+    kind = draw(st.sampled_from(KINDS))
+    return (kind,
+            draw(st.sampled_from(STANDARD_TIERS)),
+            draw(st.sampled_from((2, 3))),              # replicas
+            draw(st.integers(20, SHARD_CAP * 2)),       # num_nodes
+            draw(st.integers(0, 2 ** 16)),              # graph seed
+            draw(st.booleans()))                        # compressed halos
+
+
+@given(replica_case())
+def test_replica_dispatch_bit_identical_to_single(case):
+    """DESIGN.md §15: replica-group dispatch is a WIDTH concern, never a
+    numerics concern — each replica row of an R-wide sharded plan returns
+    the BIT-identical logits of the single-replica plan on the same
+    operands (the replica axis carries no collectives; halo psums name
+    only the shard axis). Holds for every kind, tier, and wire format, on
+    DIFFERENT graphs per row."""
+    kind, tier, replicas, n, seed, compress = case
+    shards = 2
+    cfg, t, plan1, _, params = _sharded_setup(kind, tier, shards, compress)
+    planr, _, _, _ = _replica_plan(kind, tier, shards, compress, replicas)
+    rows = []
+    for r in range(replicas):
+        nr = 20 + (n + 17 * r) % (SHARD_CAP * shards - 20)
+        g = _graph(nr, seed + r)
+        part = partition_graph(g.edge_index, nr, shards,
+                               shard_cap=SHARD_CAP)
+        slices = build_sharded_operands(g, part, cfg,
+                                        rng=np.random.default_rng(seed + r))
+        rows.append(stack_shard_slices(slices))
+    quant = None
+    if t.quantgr:
+        g0 = _graph(n, seed)
+        pg = pad_graph(g0, capacity=shards * SHARD_CAP)
+        rops = build_operands(pg, cfg, lean=True,
+                              rng=np.random.default_rng(seed))
+        quant = calibrate_tier(params, cfg, jnp.asarray(pg.features), rops)
+    xs = jnp.stack([r[0] for r in rows])
+    ops = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
+                                 *[r[1] for r in rows])
+    masks = jnp.stack([r[2] for r in rows])
+    wide = np.asarray(planr(params, xs, ops, quant, node_mask=masks))
+    for r, (x1, o1, m1) in enumerate(rows):
+        single = np.asarray(plan1(params, x1, o1, quant, node_mask=m1))
+        np.testing.assert_array_equal(wide[r], single)
+
+
 # --------------------------------------------------- pack/unpack round-trips
 
 

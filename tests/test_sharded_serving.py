@@ -381,5 +381,126 @@ def test_oversized_graph_without_shard_counts_still_raises():
 def test_summary_exposes_shard_observability(engine):
     s = engine.summary()
     for k in ("shard_counts", "sharded_batches", "halo_bytes_exchanged",
-              "collective_bytes_compressed", "collective_bytes_exact"):
+              "collective_bytes_compressed", "collective_bytes_exact",
+              "delta_halo_bytes_exchanged", "delta_halo_bytes_full",
+              "delta_dirty_rows"):
         assert k in s, k
+
+
+# ---------------------------------------------------------- replica groups
+
+
+def _replica_engine(replicas):
+    sc = GraphServeConfig(ladder=BucketLadder(buckets=(BUCKET,)),
+                          batch_slots=2, shard_counts=(2, 4),
+                          return_logits=True, replica_groups=replicas)
+    eng = GraphServe(sc, seed=0)
+    eng.register_model("gcn", _cfg("gcn"), tiers=("fp32",))
+    eng.warmup()
+    return eng
+
+def test_replica_groups_widen_sharded_dispatch():
+    """§15 replica groups: with replica_groups=R the engine packs up to R
+    same-key sharded requests into ONE plan call — N queries run in
+    ceil(N/R) sharded batches instead of N — and every request's logits
+    are BIT-identical to the width-1 engine's (the replica axis carries no
+    collectives, so width is a throughput knob, never a numerics knob)."""
+    e1, e2 = _replica_engine(1), _replica_engine(2)
+    g = _graph(200, 20)
+    want = {}
+    for eng in (e1, e2):
+        gid = eng.attach(g, model="gcn")
+        before = eng.metrics["sharded_batches"]
+        uids = [eng.query(gid) for _ in range(5)]
+        eng.run()
+        eng.assert_warm()
+        done = {r.uid: r.logits for r in eng.finished}
+        got = [done[u] for u in uids]
+        if eng is e1:
+            assert eng.metrics["sharded_batches"] - before == 5
+            want = got
+        else:
+            # ceil(5 / 2) = 3 dispatches; the odd batch pads its replica
+            # slot (2/6 + padded slot counted against occupancy)
+            assert eng.metrics["sharded_batches"] - before == 3
+            assert eng.metrics["slots_filled"] == 5
+            assert eng.metrics["slots_total"] == 6
+            for a, b in zip(want, got):
+                np.testing.assert_array_equal(a, b)
+        eng.detach(gid)
+
+
+def test_partition_method_config_reaches_attach():
+    """`GraphServeConfig.partition_method` selects the attach()-time
+    partitioner: "greedy" reproduces the §12 streaming cut verbatim,
+    the default reproduces the §15 multilevel cut."""
+    g = _graph(260, 21)
+    lad = BucketLadder(buckets=(BUCKET,))
+    for method in ("multilevel", "greedy"):
+        sc = GraphServeConfig(ladder=lad, shard_counts=(2, 4),
+                              partition_method=method)
+        eng = GraphServe(sc, seed=0)
+        eng.register_model("gcn", _cfg("gcn"))
+        gid = eng.attach(g, model="gcn")
+        direct = partition_for_ladder(g.edge_index, g.num_nodes, lad,
+                                      (2, 4), method=method)
+        np.testing.assert_array_equal(eng._sharded[gid][0].assignment,
+                                      direct.assignment)
+        assert eng._sharded[gid][0].cut_edges == direct.cut_edges
+
+
+# ------------------------------------------------------- halo-delta bytes
+
+
+def test_sharded_delta_halo_byte_accounting():
+    """§15 halo-delta exchange accounting: a one-pair cross-shard GrAd
+    delta dirties exactly its boundary rows, the summary prices the dirty
+    exchange STRICTLY below a full halo re-exchange (both through
+    `ring_psum_nbytes` at the exact-fp32 rate the rebuild-exact operand
+    patch requires), and the patched graph still serves correct logits."""
+    sc = GraphServeConfig(ladder=BucketLadder(buckets=(BUCKET,)),
+                          batch_slots=1, shard_counts=(2, 4),
+                          return_logits=True)
+    eng = GraphServe(sc, seed=0)
+    eng.register_model("gcn", _cfg("gcn"))
+    eng.warmup()
+    g = _graph(200, 22)
+    gid = eng.attach(g, model="gcn")
+    eng.query(gid)
+    eng.run()                     # cut + cache the shard slices
+    part = eng._sharded[gid][0]
+    s0 = np.flatnonzero(part.assignment == 0)
+    s1 = np.flatnonzero(part.assignment == 1)
+    adj = eng.graphs[gid][1].adj
+    pair = next((int(u), int(v)) for u in s0[:20] for v in s1[:20]
+                if adj[u, v] == 0)
+    assert eng.update_delta(gid, add_edges=[pair]) is True
+    s = eng.summary()
+    assert s["delta_dirty_rows"] >= 2          # both endpoints now boundary
+    assert 0 < s["delta_halo_bytes_exchanged"] < s["delta_halo_bytes_full"]
+    # exact ratio: k dirty rows of the (full x full) operand matrices plus
+    # k entries of D^-1/2, so delta/full == k/full_rows (int truncation)
+    want = s["delta_halo_bytes_full"] * s["delta_dirty_rows"] / part.full_rows
+    assert abs(s["delta_halo_bytes_exchanged"] - want) <= 2
+    uid = eng.query(gid)
+    eng.run()
+    eng.assert_warm()
+    r = [f for f in eng.finished if f.uid == uid][0]
+    e = eng.models["gcn"]
+    g2 = eng._sharded[gid][0], eng._sharded[gid][1]
+    ref = _reference_logits(e.cfg, e.tiers["fp32"], e.params, g2[1],
+                            part.full_rows)[:200]
+    np.testing.assert_allclose(r.logits, ref, atol=0.05)
+    # an interior flip (both endpoints shard 0, no cross-shard neighbors
+    # gained) moves NO delta bytes
+    inter = [u for u in s0
+             if not (adj[u, :200] != 0)[part.assignment != 0].any()]
+    if len(inter) >= 2:
+        u, v = int(inter[0]), int(inter[1])
+        before = eng.summary()["delta_halo_bytes_exchanged"]
+        assert eng.update_delta(
+            gid, add_edges=[(u, v)] if adj[u, v] == 0 else None,
+            remove_edges=[(u, v)] if adj[u, v] != 0 else None) is True
+        after = eng.summary()
+        assert after["delta_halo_bytes_exchanged"] == before
+    eng.detach(gid)
